@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks.
+
+On CPU the Pallas kernels execute in interpret mode, so the *timing*
+numbers reflect the jnp oracle path (the deployable op on this host);
+the kernel itself is timed at a reduced size purely to exercise the
+tiling logic, and correctness vs the oracle is re-asserted here.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.relay_mix import relay_mix_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+from .common import Row
+
+
+def _time(f, *a, repeat=5, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(f(*a))
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        jax.block_until_ready(f(*a))
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def bench_relay_mix() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    n, d = 16, 1 << 20
+    M = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    jnp_ref = jax.jit(lambda m, x: ref.relay_mix_ref(m, x))
+    us_ref = _time(jnp_ref, M, X)
+    # interpret-mode kernel at reduced d (tiling logic exercised, not speed)
+    Xs = X[:, : 1 << 14]
+    got = relay_mix_pallas(M, Xs, block_d=2048, interpret=True)
+    err = float(jnp.abs(got - ref.relay_mix_ref(M, Xs)).max())
+    us_k = _time(lambda m, x: relay_mix_pallas(m, x, block_d=2048, interpret=True), M, Xs)
+    rows.append(("relay_mix/jnp_ref_d1M", us_ref, f"bytes={X.nbytes}"))
+    rows.append(("relay_mix/pallas_interp_d16k", us_k, f"max_err={err:.1e}"))
+    return rows
+
+
+def bench_flash_attention() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    BH, T, D = 4, 1024, 64
+    q = jnp.asarray(rng.normal(size=(BH, T, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(BH, T, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(BH, T, D)), jnp.float32)
+    jnp_ref = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us_ref = _time(jnp_ref, q, k, v)
+    qs, ks, vs = q[:, :256], k[:, :256], v[:, :256]
+    got = flash_attention_pallas(qs, ks, vs, block_q=128, block_kv=128, interpret=True)
+    err = float(jnp.abs(got - ref.flash_attention_ref(qs, ks, vs)).max())
+    us_k = _time(
+        lambda q, k, v: flash_attention_pallas(q, k, v, block_q=128, block_kv=128, interpret=True),
+        qs, ks, vs,
+    )
+    rows.append(("flash_attn/jnp_ref_T1024", us_ref, f"flops={4*BH*T*T*D}"))
+    rows.append(("flash_attn/pallas_interp_T256", us_k, f"max_err={err:.1e}"))
+    return rows

@@ -1,0 +1,90 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON
+records written by repro.launch.dryrun.
+
+    PYTHONPATH=src python -m benchmarks.make_report [--tag TAG] > tables.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024 or unit == "TB":
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}TB"
+
+
+def load(tag: str = ""):
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if (r.get("tag") or "") == tag:
+            recs.append(r)
+    return recs
+
+
+def roofline_table(recs, mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | mode | compute (s) | memory (s) | collective (s) "
+        "| bottleneck | useful/HLO | temp/chip | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|".replace("|---|---|---|---|---|---|---|---|---|---|",
+            "|---|---|---|---:|---:|---:|---|---:|---:|---|"),
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        temp = r["memory_analysis"].get("temp_size_in_bytes", 0)
+        args_b = r["memory_analysis"].get("argument_size_in_bytes", 0)
+        fits = "yes" if (temp + args_b) <= 16e9 else "**no**"
+        u = r["useful_flop_ratio"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['fl_mode'] if r['shape']=='train_4k' else '-'} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} | {t['collective_s']:.3f} "
+            f"| {t['bottleneck'].replace('_s','')} | {u and round(u,3)} "
+            f"| {fmt_bytes(temp)} | {fits} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | compile (s) | args/chip | temp/chip | "
+        "collective bytes/chip | top collective |",
+        "|---|---|---|---:|---:|---:|---:|---|",
+    ]
+    for r in recs:
+        ma = r["memory_analysis"]
+        top = max(r["collectives"].items(), key=lambda kv: kv[1])[0] if any(
+            r["collectives"].values()) else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.0f} "
+            f"| {fmt_bytes(ma.get('argument_size_in_bytes', 0))} "
+            f"| {fmt_bytes(ma.get('temp_size_in_bytes', 0))} "
+            f"| {fmt_bytes(r['collective_bytes_per_chip'])} | {top} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load(args.tag)
+    single = [r for r in recs if r["mesh"] == "16x16"]
+    multi = [r for r in recs if r["mesh"] == "2x16x16"]
+    print(f"## §Dry-run ({len(single)} single-pod + {len(multi)} multi-pod records)\n")
+    print(dryrun_table(recs))
+    print(f"\n## §Roofline (single-pod 16x16, {len(single)} records)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Benchmarks mirroring the paper's figures (Sec. V numerical simulations).
+
+fig2a — IID data, one well-connected client, ER D2D (p_c in {0.9, 0.5}).
+fig2b — non-IID (s=3), heterogeneous uplinks, ER D2D.
+fig4  — mmWave geometric topology: intermittent D2D collaboration vs
+        permanent-only links vs no collaboration.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import Aggregation, optimize_weights, fedavg_weights, variance_S
+from repro.core import topology
+
+from .common import BENCH_ROUNDS, Row, run_cnn_fl, strategies_for
+
+
+def bench_fig2a() -> List[Row]:
+    rows: List[Row] = []
+    for p_c in (0.9, 0.5):
+        m = topology.paper_fig2a(p_c=p_c)
+        strats, _ = strategies_for(m)
+        for label, agg, A in strats:
+            if label != "colrel" and p_c != 0.9:
+                continue  # baselines don't depend on p_c
+            t0 = time.perf_counter()
+            out = run_cnn_fl(m, agg, A)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((
+                f"fig2a/{label}_pc{p_c}",
+                us / max(BENCH_ROUNDS, 1),
+                f"acc={out['acc']:.3f};loss={out['loss']:.3f}",
+            ))
+    return rows
+
+
+def bench_fig2b() -> List[Row]:
+    rows: List[Row] = []
+    for p_c in (0.9, 0.5):
+        m = topology.paper_fig2b(p_c=p_c)
+        strats, _ = strategies_for(m)
+        for label, agg, A in strats:
+            if label != "colrel" and p_c != 0.9:
+                continue
+            t0 = time.perf_counter()
+            out = run_cnn_fl(m, agg, A, non_iid_s=3)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((
+                f"fig2b/{label}_pc{p_c}",
+                us / max(BENCH_ROUNDS, 1),
+                f"acc={out['acc']:.3f};loss={out['loss']:.3f}",
+            ))
+    return rows
+
+
+def bench_fig4_mmwave() -> List[Row]:
+    rows: List[Row] = []
+    cases = {
+        "intermittent": topology.paper_mmwave_layout(d2d_mode="intermittent"),
+        "permanent": topology.paper_mmwave_layout(d2d_mode="permanent"),
+        "no_collab": topology.no_collaboration(10, topology.paper_mmwave_layout().p),
+    }
+    for label, m in cases.items():
+        res = optimize_weights(m, sweeps=25, fine_tune_sweeps=25)
+        t0 = time.perf_counter()
+        out = run_cnn_fl(m, Aggregation.COLREL, res.A, non_iid_s=3)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"fig4/colrel_{label}",
+            us / max(BENCH_ROUNDS, 1),
+            f"acc={out['acc']:.3f};loss={out['loss']:.3f};S={res.S:.2f}",
+        ))
+    # blind baseline under the same mmWave uplinks
+    m = cases["no_collab"]
+    t0 = time.perf_counter()
+    out = run_cnn_fl(m, Aggregation.FEDAVG_BLIND, fedavg_weights(10), non_iid_s=3)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append((
+        "fig4/fedavg_blind", us / max(BENCH_ROUNDS, 1),
+        f"acc={out['acc']:.3f};loss={out['loss']:.3f}",
+    ))
+    return rows

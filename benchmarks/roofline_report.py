@@ -1,0 +1,45 @@
+"""Summarize the dry-run JSON records into the §Roofline table."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from .common import Row
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_records(mesh: str | None = None, tag: str = "") -> list[dict]:
+    recs = []
+    if not RESULTS.exists():
+        return recs
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and r["mesh"] != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def bench_dryrun_roofline() -> List[Row]:
+    rows: List[Row] = []
+    recs = load_records(mesh="16x16")
+    if not recs:
+        return [("roofline/none", 0.0, "run repro.launch.dryrun first")]
+    for r in recs:
+        t = r["roofline"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+            f"bottleneck={t['bottleneck'].replace('_s','')};"
+            f"c={t['compute_s']:.3f};m={t['memory_s']:.3f};x={t['collective_s']:.3f};"
+            f"useful={r['useful_flop_ratio'] and round(r['useful_flop_ratio'],3)}",
+        ))
+    n_multi = len(load_records(mesh="2x16x16"))
+    rows.append(("roofline/summary", 0.0,
+                 f"single_pod={len(recs)};multi_pod={n_multi}"))
+    return rows

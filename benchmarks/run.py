@@ -1,0 +1,53 @@
+"""Benchmark harness — one benchmark per paper table/figure plus the
+kernel micro-benches and the dry-run roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2a,theorem1]
+    BENCH_ROUNDS=50 PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def all_benches():
+    from . import kernels_bench, paper_figures, roofline_report, theory
+
+    return {
+        "fig2a": paper_figures.bench_fig2a,
+        "fig2b": paper_figures.bench_fig2b,
+        "fig4": paper_figures.bench_fig4_mmwave,
+        "theorem1": theory.bench_theorem1,
+        "copt_alpha": theory.bench_copt_alpha,
+        "relay_mix": kernels_bench.bench_relay_mix,
+        "flash_attn": kernels_bench.bench_flash_attention,
+        "roofline": roofline_report.bench_dryrun_roofline,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+    benches = all_benches()
+    names = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            for row_name, us, derived in benches[name]():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

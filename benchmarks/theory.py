@@ -1,0 +1,109 @@
+"""Theorem 1 / Algorithm 3 benchmarks.
+
+theorem1 — strongly-convex quadratic: validates (i) the O(1/r) tail of
+E||x^(r) - x*||^2 under the theorem's step-size schedule, and (ii) that
+the COPT-alpha-optimized A (smaller S) yields a smaller error floor than
+the feasible initialization (larger S).
+
+copt_alpha — Algorithm 3 runtime scaling (the paper's O(I(n^2 + K))).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Aggregation,
+    initial_weights,
+    optimize_weights,
+    sample_round,
+    variance_S,
+)
+from repro.core import topology
+from repro.data import quadratic_problem
+from repro.data.pipeline import ClientDataset
+from repro.fl import FLTrainer
+from repro.optim import sgd, sgd_momentum, inverse_round_decay
+
+from .common import Row
+
+
+def _quad_mse(model, A, *, rounds=120, local_steps=8, seeds=(0, 1, 2), sigma=0.5,
+              record_tail=False):
+    prob = quadratic_problem(model.n, 16, mu=1.0, L=8.0, hetero=1.0, seed=0)
+    H = jnp.asarray(prob["H"], jnp.float32)
+    xs = jnp.asarray(prob["x_star"], jnp.float32)
+
+    def loss_fn(params, batch):
+        x = params["x"]
+        d = x - batch["center"][0]
+        return 0.5 * d @ (H @ d) + sigma * batch["noise"][0] @ x, {}
+
+    def clients(seed):
+        out = []
+        for i in range(model.n):
+            c = prob["centers"][i].astype(np.float32)
+            pool = np.random.default_rng(50 + i).normal(size=(4096, 16)).astype(np.float32)
+            out.append(ClientDataset({"center": np.tile(c, (4096, 1)), "noise": pool},
+                                     batch_size=1, seed=seed + i))
+        return out
+
+    # Theorem 1 schedule: eta_r = (4/mu) / (rT + 1), clipped for stability
+    sched = lambda step: jnp.minimum(
+        inverse_round_decay(4.0, local_steps)(step), jnp.float32(0.05)
+    )
+    errs, tails = [], []
+    for seed in seeds:
+        t = FLTrainer(loss_fn, {"x": jnp.zeros(16)}, model, A, clients(seed),
+                      sgd(sched), sgd_momentum(1.0, beta=0.0),
+                      local_steps=local_steps, aggregation=Aggregation.COLREL_FUSED,
+                      seed=seed)
+        tail = []
+        for r in range(rounds):
+            t.run(1)
+            if record_tail and r >= rounds // 2:
+                tail.append(float(jnp.sum((t.params["x"] - xs) ** 2)))
+        errs.append(float(jnp.sum((t.params["x"] - xs) ** 2)))
+        tails.append(tail)
+    return float(np.mean(errs)), tails
+
+
+def bench_theorem1() -> List[Row]:
+    rows: List[Row] = []
+    m = topology.paper_fig2a()
+    res = optimize_weights(m, sweeps=25, fine_tune_sweeps=25)
+    A0 = initial_weights(m)
+
+    t0 = time.perf_counter()
+    e_opt, tails = _quad_mse(m, res.A, record_tail=True)
+    us = (time.perf_counter() - t0) * 1e6
+    e_init, _ = _quad_mse(m, A0)
+
+    # O(1/r) check: tail error at r and 2r should shrink ~2x (ratio in [1.2, 4])
+    tail = np.mean([t for t in tails if t], axis=0)
+    r_half, r_full = len(tail) // 4, len(tail) - 1
+    decay_ratio = tail[r_half] / max(tail[r_full], 1e-12)
+    rows.append(("theorem1/opt_A", us / 120,
+                 f"mse={e_opt:.4f};S={res.S:.2f};tail_decay={decay_ratio:.2f}"))
+    rows.append(("theorem1/init_A", 0.0,
+                 f"mse={e_init:.4f};S={res.S_init:.2f};S_ratio={res.S_init/res.S:.2f}"))
+    return rows
+
+
+def bench_copt_alpha() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    for n in (10, 20, 40):
+        p = rng.uniform(0.1, 0.9, n)
+        m = topology.fully_connected(n, p, p_c=0.6, rho=1.0)
+        t0 = time.perf_counter()
+        res = optimize_weights(m, sweeps=15, fine_tune_sweeps=15)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"copt_alpha/n{n}", us,
+                     f"S0={res.S_init:.2f};S={res.S:.2f};x{res.S_init/max(res.S,1e-9):.1f}"))
+    return rows

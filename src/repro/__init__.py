@@ -1,0 +1,7 @@
+"""repro: ColRel (collaborative-relaying federated learning) in JAX.
+
+Subpackages: core (the paper), fl (federated runtime), models (the zoo),
+optim, data, dist, kernels (Pallas), checkpoint, configs, launch.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,66 @@
+"""msgpack checkpointing for nested dict/list/tuple pytrees of arrays.
+
+Arrays are stored as (dtype, shape, raw bytes); bfloat16 round-trips via a
+uint16 view.  Scalars/ints/floats pass through.  Atomic write via rename.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _encode(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        return {"__t": "d", "v": {k: _encode(v) for k, v in obj.items()}}
+    if isinstance(obj, (list, tuple)):
+        return {"__t": "l" if isinstance(obj, list) else "t", "v": [_encode(v) for v in obj]}
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        arr = np.asarray(obj)
+        if arr.dtype == jnp.bfloat16:
+            return {"__t": "a", "dtype": _BF16, "shape": list(arr.shape),
+                    "data": arr.view(np.uint16).tobytes()}
+        return {"__t": "a", "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "data": arr.tobytes()}
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return {"__t": "s", "v": obj}
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _decode(obj: Any) -> Any:
+    t = obj["__t"]
+    if t == "d":
+        return {k: _decode(v) for k, v in obj["v"].items()}
+    if t == "l":
+        return [_decode(v) for v in obj["v"]]
+    if t == "t":
+        return tuple(_decode(v) for v in obj["v"])
+    if t == "a":
+        shape = tuple(obj["shape"])
+        if obj["dtype"] == _BF16:
+            return np.frombuffer(obj["data"], np.uint16).reshape(shape).view(jnp.bfloat16)
+        return np.frombuffer(obj["data"], np.dtype(obj["dtype"])).reshape(shape)
+    return obj["v"]
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    payload = msgpack.packb(_encode(jax.tree.map(np.asarray, tree)), use_bin_type=True)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with tempfile.NamedTemporaryFile(dir=d, delete=False) as f:
+        f.write(payload)
+        tmp = f.name
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False))

@@ -1,0 +1,10 @@
+from .base import ARCH_IDS, CLI_ALIASES, INPUT_SHAPES, InputShape, get_arch, supported_shapes
+
+__all__ = [
+    "ARCH_IDS",
+    "CLI_ALIASES",
+    "INPUT_SHAPES",
+    "InputShape",
+    "get_arch",
+    "supported_shapes",
+]

@@ -1,0 +1,54 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained.
+
+[hf:databricks/dbrx-base]  40L d_model=6144 48H (GQA kv=8) d_ff=10752
+(per expert) vocab=100352, MoE 16e top-4.
+
+long_500k skipped: pure full-attention dense-attend arch (DESIGN.md §5).
+FL mode: weighted_grad (T=1 fused round) — 132B per-client copies do not
+fit the per-client layout on a 16-GB/chip pod, and the client_sequential
+nested scan is compile-prohibitive at 512-way SPMD on this container's
+single-core XLA (DESIGN.md §3; client_sequential remains available).
+"""
+
+from repro.models import ModelConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+def full(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b",
+        arch_type="moe",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=10752,
+        d_ff_expert=10752,
+        vocab_size=100352,
+        n_experts=16,
+        top_k=4,
+        norm="rmsnorm",
+        mlp="swiglu",
+        max_seq_len=32768,
+        dtype=dtype,
+        fl_mode="weighted_grad",
+    )
+
+
+def smoke() -> ModelConfig:
+    return full(dtype="float32").replace(
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        d_ff_expert=256,
+        vocab_size=512,
+        n_experts=4,
+        top_k=2,
+        max_seq_len=256,
+        fl_mode="per_client",
+    )

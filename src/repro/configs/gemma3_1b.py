@@ -1,0 +1,47 @@
+"""gemma3-1b [dense] — 5:1 local:global sliding-window attention, 128k.
+
+[hf:google/gemma-3-1b-pt]  26L d_model=1152 4H (GQA kv=1 = MQA)
+d_ff=6912 vocab=262144, head_dim=256, window=512 on local layers, one
+global layer per 6.
+
+long_500k RUNS: 25/26 layers keep only a 512-token window cache; the
+global layers keep the full (sharded) cache — the dense-arch exception
+allowed by the assignment because the sliding-window variant is native
+to the model card.
+"""
+
+from repro.models import ModelConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def full(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b",
+        arch_type="dense",
+        n_layers=26,
+        d_model=1152,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=6912,
+        vocab_size=262144,
+        sliding_window=512,
+        local_global_ratio=5,
+        tie_embeddings=True,
+        qk_norm=True,
+        norm="rmsnorm",
+        mlp="swiglu",
+        rope_theta=1e6,
+        max_seq_len=524288,
+        dtype=dtype,
+        fl_mode="per_client",
+    )
+
+
+def smoke() -> ModelConfig:
+    return full(dtype="float32").replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=1, head_dim=32,
+        d_ff=256, vocab_size=512, sliding_window=32, local_global_ratio=1,
+        max_seq_len=256,
+    )

@@ -1,0 +1,43 @@
+"""granite-moe-3b-a800m [moe] — many small experts.
+
+[hf:ibm-granite/granite-3.0 family]  32L d_model=1536 24H (GQA kv=8)
+d_ff=512 per expert, vocab=49155, MoE 40e top-8.
+
+Expert count (40) does not divide the 16-wide model mesh axis, so expert
+weights shard over d_ff (tensor-parallel inside experts) instead of the
+expert axis — see launch/sharding.py.  long_500k skipped: full attention.
+"""
+
+from repro.models import ModelConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+def full(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m",
+        arch_type="moe",
+        n_layers=32,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=512,
+        d_ff_expert=512,
+        vocab_size=49155,
+        n_experts=40,
+        top_k=8,
+        norm="rmsnorm",
+        mlp="swiglu",
+        max_seq_len=32768,
+        dtype=dtype,
+        fl_mode="per_client",
+    )
+
+
+def smoke() -> ModelConfig:
+    return full(dtype="float32").replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=64, d_ff_expert=64, vocab_size=512, n_experts=4, top_k=2,
+        max_seq_len=256,
+    )

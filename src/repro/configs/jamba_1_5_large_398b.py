@@ -1,0 +1,61 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba + attention 1:7, MoE.
+
+[arXiv:2403.19887]  72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2; one attention layer per 8 (9 periods of
+[attn, 7x mamba]), MoE MLP every other layer.
+
+long_500k RUNS: the hybrid's decode state is O(1) in sequence for the 63
+Mamba layers; only the 9 attention layers keep a (sharded) 500k KV cache.
+FL mode: weighted_grad (T=1 fused round; 398B per-client copies are
+infeasible — DESIGN.md §3; client_sequential remains available).
+"""
+
+from repro.models import ModelConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def full(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        arch_type="hybrid",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=24576,
+        d_ff_expert=24576,
+        vocab_size=65536,
+        n_experts=16,
+        top_k=2,
+        attn_every=8,
+        moe_every=2,
+        ssm_d_state=16,
+        ssm_expand=2,
+        ssm_chunk=64,
+        norm="rmsnorm",
+        mlp="swiglu",
+        max_seq_len=524288,
+        dtype=dtype,
+        fl_mode="weighted_grad",
+    )
+
+
+def smoke() -> ModelConfig:
+    return full(dtype="float32").replace(
+        n_layers=4,
+        attn_every=4,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        d_ff_expert=256,
+        vocab_size=512,
+        n_experts=4,
+        top_k=2,
+        ssm_chunk=16,
+        max_seq_len=256,
+        fl_mode="per_client",
+    )

@@ -1,0 +1,37 @@
+"""rwkv6-1.6b [ssm] — "Finch", data-dependent per-channel decay.
+
+[arXiv:2404.05892]  24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536; 32 heads of 64 for the wkv state.
+
+long_500k RUNS: decode state is O(1) in sequence (per-layer (H, 64, 64)
+wkv state + token-shift vectors) — the flagship sub-quadratic arch.
+"""
+
+from repro.models import ModelConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def full(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b",
+        arch_type="ssm",
+        n_layers=24,
+        d_model=2048,
+        n_heads=32,  # wkv heads of dim 64
+        n_kv_heads=32,
+        d_ff=7168,
+        vocab_size=65536,
+        norm="layernorm",
+        ssm_chunk=32,
+        max_seq_len=524288,
+        dtype=dtype,
+        fl_mode="per_client",
+    )
+
+
+def smoke() -> ModelConfig:
+    return full(dtype="float32").replace(
+        n_layers=2, d_model=128, n_heads=2, n_kv_heads=2, d_ff=256,
+        vocab_size=512, ssm_chunk=16, max_seq_len=256,
+    )

@@ -1,0 +1,50 @@
+"""ColRel core: the paper's contribution as a composable library.
+
+Host-side (numpy): connectivity models, topologies, the variance functional
+S / Sbar, and the COPT-alpha weight optimizer (Algorithm 3).
+
+Device-side (JAX): the relay consensus (Eq. (3)), PS aggregation (Alg. 2),
+and the FedAvg baselines — all jit/pjit-compatible.
+"""
+
+from .connectivity import (
+    LinkModel,
+    effective_weights,
+    reciprocity_matrix,
+    sample_round,
+    sample_rounds,
+)
+from .weights import (
+    OptResult,
+    fedavg_weights,
+    importance_weights,
+    initial_weights,
+    is_unbiased,
+    optimize_weights,
+    unbiasedness_residual,
+    variance_S,
+    variance_Sbar,
+)
+from .aggregation import Aggregation, aggregate
+from . import relay, topology
+
+__all__ = [
+    "LinkModel",
+    "reciprocity_matrix",
+    "sample_round",
+    "sample_rounds",
+    "effective_weights",
+    "variance_S",
+    "variance_Sbar",
+    "unbiasedness_residual",
+    "is_unbiased",
+    "initial_weights",
+    "fedavg_weights",
+    "importance_weights",
+    "optimize_weights",
+    "OptResult",
+    "Aggregation",
+    "aggregate",
+    "relay",
+    "topology",
+]

@@ -1,0 +1,56 @@
+"""PS aggregation strategies: ColRel and the paper's three FedAvg baselines.
+
+All strategies consume *stacked per-client updates* ``(n, d)`` plus the
+round's sampled connectivity, and return the global delta the PS applies.
+They are pure JAX functions (jit/vmap/pjit friendly); the tau masks enter
+as traced arrays so one compiled step serves every round.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import relay as _relay
+
+__all__ = ["Aggregation", "aggregate"]
+
+
+class Aggregation(str, enum.Enum):
+    """Paper Sec. V strategies."""
+
+    COLREL = "colrel"                  # the paper's scheme (faithful path)
+    COLREL_FUSED = "colrel_fused"      # exact fused weighted-reduction path
+    FEDAVG_PERFECT = "fedavg_perfect"  # upper bound: everyone always arrives
+    FEDAVG_BLIND = "fedavg_blind"      # sum of arrivals / n (OAC-style)
+    FEDAVG_NONBLIND = "fedavg_nonblind"  # sum of arrivals / #arrivals
+
+
+def aggregate(
+    strategy: Aggregation | str,
+    updates: jax.Array,
+    *,
+    tau_up: jax.Array,
+    tau_dd: Optional[jax.Array] = None,
+    A: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Global delta ``(d,)`` from stacked client updates ``(n, d)``."""
+    strategy = Aggregation(strategy)
+    n = updates.shape[0]
+    t = tau_up.astype(updates.dtype)
+
+    if strategy == Aggregation.FEDAVG_PERFECT:
+        return jnp.mean(updates, axis=0)
+    if strategy == Aggregation.FEDAVG_BLIND:
+        return (t @ updates) / n
+    if strategy == Aggregation.FEDAVG_NONBLIND:
+        k = jnp.maximum(jnp.sum(t), 1.0)
+        return (t @ updates) / k
+    if A is None or tau_dd is None:
+        raise ValueError(f"{strategy} needs A and tau_dd")
+    return _relay.colrel_round_delta(
+        updates, A, tau_up, tau_dd, fused=strategy == Aggregation.COLREL_FUSED
+    )

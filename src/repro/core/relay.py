@@ -1,0 +1,79 @@
+"""The collaborative-relaying consensus operation (paper Eq. (3)) in JAX.
+
+Two mathematically equivalent execution paths:
+
+* **Faithful** (Alg. 1 lines 8-11 + Alg. 2 line 5): materialize each
+  client's relayed consensus ``Dx~_i = sum_j tau_ji alpha_ij Dx_j`` (a
+  masked-weighted mixing across the client axis — an all-gather in the
+  distributed setting), then the PS adds ``(1/n) sum_i tau_i Dx~_i``.
+* **Fused** (beyond-paper, exact): collapse both stages into the effective
+  per-client scalar weights ``w_j = sum_i tau_i tau_ji alpha_ij`` and a
+  single weighted reduction.  Identical output for identical tau draws.
+
+Everything here operates on *stacked dense updates* ``(n, d)``; pytree
+plumbing lives in ``repro/fl`` and sharded execution in ``repro/dist``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "mixing_matrix",
+    "relay_mix",
+    "ps_aggregate",
+    "effective_weights",
+    "fused_round_delta",
+    "colrel_round_delta",
+]
+
+
+def mixing_matrix(A: jax.Array, tau_dd: jax.Array) -> jax.Array:
+    """M[i, j] = alpha_ij * tau_ji — the realized consensus matrix.
+
+    ``Dx~ = M @ Dx`` reproduces Eq. (3):  Dx~_i = sum_j tau_ji alpha_ij Dx_j.
+    ``tau_dd[j, i]`` is the indicator that j's broadcast reached i.
+    """
+    return A * tau_dd.T
+
+
+def relay_mix(updates: jax.Array, A: jax.Array, tau_dd: jax.Array) -> jax.Array:
+    """Faithful local consensus: (n, d) -> (n, d), Dx~ = (A * tau_dd^T) Dx."""
+    M = mixing_matrix(A.astype(updates.dtype), tau_dd.astype(updates.dtype))
+    return M @ updates
+
+
+def ps_aggregate(updates_tilde: jax.Array, tau_up: jax.Array) -> jax.Array:
+    """Blind PS sum (Alg. 2 line 5, without the +x^(r)):
+    (1/n) sum_i tau_i Dx~_i."""
+    n = updates_tilde.shape[0]
+    return (tau_up.astype(updates_tilde.dtype) @ updates_tilde) / n
+
+
+def effective_weights(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array) -> jax.Array:
+    """w_j = sum_i tau_i tau_ji alpha_ij (JAX twin of
+    connectivity.effective_weights)."""
+    return jnp.einsum("i,ij,ji->j", tau_up, A, tau_dd)
+
+
+def fused_round_delta(updates: jax.Array, w: jax.Array) -> jax.Array:
+    """(1/n) sum_j w_j Dx_j — the fused relay+aggregate reduction."""
+    n = updates.shape[0]
+    return (w.astype(updates.dtype) @ updates) / n
+
+
+def colrel_round_delta(
+    updates: jax.Array,
+    A: jax.Array,
+    tau_up: jax.Array,
+    tau_dd: jax.Array,
+    *,
+    fused: bool = False,
+) -> jax.Array:
+    """End-to-end ColRel round delta applied by the PS: (d,) from (n, d)."""
+    if fused:
+        w = effective_weights(A.astype(jnp.float32), tau_up, tau_dd)
+        return fused_round_delta(updates, w)
+    tilde = relay_mix(updates, A, tau_dd)
+    return ps_aggregate(tilde, tau_up)

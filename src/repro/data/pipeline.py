@@ -1,0 +1,52 @@
+"""Per-client batch streams for the FL trainer.
+
+``ClientDataset`` wraps one client's local arrays and yields minibatches
+with its own RNG (clients sample independently, as in local SGD).
+``federated_batches`` stacks one minibatch per client into a leading
+client axis — the layout the per-client execution mode consumes
+(client axis ↔ mesh "data" axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+__all__ = ["ClientDataset", "federated_batches"]
+
+
+@dataclasses.dataclass
+class ClientDataset:
+    arrays: Dict[str, np.ndarray]  # same leading dim N_i
+    batch_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        ns = {k: v.shape[0] for k, v in self.arrays.items()}
+        assert len(set(ns.values())) == 1, f"ragged arrays {ns}"
+        self.n = next(iter(ns.values()))
+        self._rng = np.random.default_rng(self.seed)
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        idx = self._rng.integers(0, self.n, size=self.batch_size)
+        return {k: v[idx] for k, v in self.arrays.items()}
+
+
+def federated_batches(clients: Sequence[ClientDataset]) -> Dict[str, np.ndarray]:
+    """One synchronized round of minibatches, stacked (n_clients, B, ...)."""
+    batches = [c.next_batch() for c in clients]
+    return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
+
+
+def make_federated_clients(
+    arrays: Dict[str, np.ndarray],
+    partitions: List[np.ndarray],
+    batch_size: int,
+    seed: int = 0,
+) -> List[ClientDataset]:
+    return [
+        ClientDataset({k: v[idx] for k, v in arrays.items()}, batch_size, seed=seed + 997 * i)
+        for i, idx in enumerate(partitions)
+    ]

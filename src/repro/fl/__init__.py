@@ -1,0 +1,4 @@
+from .round import RoundConfig, make_round_fn
+from .trainer import FLTrainer, TrainLog
+
+__all__ = ["RoundConfig", "make_round_fn", "FLTrainer", "TrainLog"]

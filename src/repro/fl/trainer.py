@@ -1,0 +1,113 @@
+"""Host-side FL training driver: samples connectivity, streams per-client
+batches, invokes the compiled round function, tracks metrics, evaluates.
+
+This is the entry point the paper-reproduction experiments and the
+examples use on CPU; the production launch path (``repro/launch``) wraps
+the same round function in pjit with mesh shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LinkModel, sample_round
+from repro.core.aggregation import Aggregation
+from repro.data.pipeline import ClientDataset
+from repro.fl.round import RoundConfig, make_round_fn
+from repro.optim import Optimizer
+
+Params = Any
+
+
+@dataclasses.dataclass
+class TrainLog:
+    rounds: List[int] = dataclasses.field(default_factory=list)
+    loss: List[float] = dataclasses.field(default_factory=list)
+    eval_rounds: List[int] = dataclasses.field(default_factory=list)
+    eval_metrics: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+    participation: List[float] = dataclasses.field(default_factory=list)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+class FLTrainer:
+    """Orchestrates ColRel / FedAvg training over an intermittent network."""
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        init_params: Params,
+        link_model: LinkModel,
+        A: np.ndarray,
+        clients: Sequence[ClientDataset],
+        client_opt: Optimizer,
+        server_opt: Optimizer,
+        *,
+        local_steps: int = 8,
+        aggregation: Aggregation = Aggregation.COLREL,
+        mode: str = "per_client",
+        seed: int = 0,
+        eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None,
+    ):
+        n = link_model.n
+        assert len(clients) == n, (len(clients), n)
+        self.link_model = link_model
+        self.A = jnp.asarray(A, jnp.float32)
+        self.clients = list(clients)
+        self.rng = np.random.default_rng(seed)
+        self.params = init_params
+        self.eval_fn = eval_fn
+        rc = RoundConfig(
+            n_clients=n, local_steps=local_steps, mode=mode, aggregation=aggregation
+        )
+        self.rc = rc
+        self.server_opt = server_opt
+        self.server_state = server_opt.init(init_params)
+        self._round_fn = jax.jit(make_round_fn(loss_fn, client_opt, server_opt, rc))
+        self.log = TrainLog()
+
+    # ------------------------------------------------------------------
+    def _stack_batches(self) -> Dict[str, np.ndarray]:
+        """(n_clients, T, B, ...) stacked local-step batches."""
+        T = self.rc.local_steps
+        per_client = []
+        for c in self.clients:
+            steps = [c.next_batch() for _ in range(T)]
+            per_client.append({k: np.stack([s[k] for s in steps]) for k in steps[0]})
+        out = {k: np.stack([pc[k] for pc in per_client]) for k in per_client[0]}
+        if self.rc.mode == "weighted_grad":
+            out = {k: v[:, 0] for k, v in out.items()}  # T==1 collapse
+        return out
+
+    def run(self, rounds: int, *, eval_every: int = 0, verbose: bool = False) -> TrainLog:
+        for r in range(rounds):
+            tau_up, tau_dd = sample_round(self.link_model, self.rng)
+            batches = self._stack_batches()
+            self.params, self.server_state, metrics = self._round_fn(
+                self.params,
+                self.server_state,
+                jax.tree.map(jnp.asarray, batches),
+                jnp.asarray(tau_up, jnp.float32),
+                jnp.asarray(tau_dd, jnp.float32),
+                self.A,
+            )
+            self.log.rounds.append(r)
+            self.log.loss.append(float(metrics["loss"]))
+            self.log.participation.append(float(metrics["participation"]))
+            if eval_every and (r + 1) % eval_every == 0 and self.eval_fn is not None:
+                em = self.eval_fn(self.params)
+                self.log.eval_rounds.append(r)
+                self.log.eval_metrics.append({k: float(v) for k, v in em.items()})
+                if verbose:
+                    print(f"  round {r+1:4d}  loss={self.log.loss[-1]:.4f}  " +
+                          "  ".join(f"{k}={v:.4f}" for k, v in em.items()))
+            elif verbose and (r + 1) % 10 == 0:
+                print(f"  round {r+1:4d}  loss={self.log.loss[-1]:.4f}")
+        return self.log

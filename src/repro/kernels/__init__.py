@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical hot spots:
+
+* ``relay_mix``       — the paper's relay consensus over flattened updates
+                        (bandwidth-bound (n x n) @ (n x d) streaming matmul).
+* ``flash_attention`` — causal online-softmax attention for 32k prefill.
+* ``ssd_scan``        — chunked SSD recurrence (Mamba2-style scalar decay,
+                        jamba's sequence mixer) with the state carried in
+                        VMEM scratch across the sequential chunk grid.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep
+shapes/dtypes in interpret mode and assert_allclose against the oracle.
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention_pallas
+from .relay_mix import relay_mix_pallas
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["ops", "ref", "flash_attention_pallas", "relay_mix_pallas", "ssd_scan_pallas"]

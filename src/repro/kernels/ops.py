@@ -1,0 +1,53 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs step-by-step in Python/XLA-CPU, validating the exact
+TPU tiling logic.  On a real TPU backend the same call sites compile to
+Mosaic.  ``_interpret()`` makes that switch automatic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .relay_mix import relay_mix_pallas
+from .ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def relay_mix(mixing: jax.Array, updates: jax.Array, *, block_d: int = 2048) -> jax.Array:
+    """ColRel consensus Dx~ = mixing @ updates; (n, d) streams through VMEM."""
+    return relay_mix_pallas(mixing, updates, block_d=block_d, interpret=_interpret())
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+                    block_q: int = 128, block_kv: int = 128) -> jax.Array:
+    """q/k/v (B, T, H, D) -> (B, T, H, D) causal flash attention.
+
+    GQA is handled by the caller (kv heads already broadcast); here H == KV.
+    """
+    assert causal, "only causal self-attention is kernelized"
+    B, T, H, D = q.shape
+    KV = k.shape[2]
+    if KV != H:  # broadcast grouped kv heads
+        G = H // KV
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    bq = min(block_q, T)
+    bkv = min(block_kv, T)
+    out = flash_attention_pallas(qf, kf, vf, block_q=bq, block_kv=bkv, interpret=_interpret())
+    return out.reshape(B, H, T, D).transpose(0, 2, 1, 3)
+
+
+def ssd_scan(q, k, v, log_decay, *, chunk: int = 64):
+    """Chunked SSD recurrence (Mamba2 hot loop), (BH, T, D) layout."""
+    return ssd_scan_pallas(q, k, v, log_decay, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel for the ColRel relay consensus (Eq. (3)).
+
+``Dx~ = M @ Dx`` where ``M = A * tau_dd^T`` is the realized (n x n) mixing
+matrix and ``Dx`` is the (n, d) stack of flattened client updates with d up
+to ~10^11.  The operation is totally memory-bound (arithmetic intensity
+~n flops/byte with n = 16..64), so the kernel's job is to stream the
+update matrix through VMEM exactly once at full HBM bandwidth with the tiny
+mixing matrix pinned in VMEM, instead of letting XLA materialize masked
+intermediates (A * tau^T, broadcasts) in HBM.
+
+Tiling: grid over the d axis; block = (n_pad, block_d) where n_pad rounds
+the client count up to the 8-sublane boundary and block_d is a multiple of
+the 128-lane boundary.  Each grid step does an (n_pad x n_pad) @
+(n_pad x block_d) MXU matmul — d/block_d fully independent tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relay_mix_kernel(m_ref, x_ref, o_ref):
+    m = m_ref[...]
+    x = x_ref[...]
+    o_ref[...] = jax.lax.dot(
+        m, x, precision=jax.lax.Precision.HIGHEST, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def relay_mix_pallas(
+    mixing: jax.Array,  # (n, n) float32  — A * tau_dd^T, precomputed
+    updates: jax.Array,  # (n, d)
+    *,
+    block_d: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    n, d = updates.shape
+    n_pad = _round_up(max(n, 8), 8)
+    d_pad = _round_up(d, block_d)
+    m = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(mixing.astype(jnp.float32))
+    x = jnp.zeros((n_pad, d_pad), updates.dtype).at[:n, :d].set(updates)
+
+    out = pl.pallas_call(
+        _relay_mix_kernel,
+        grid=(d_pad // block_d,),
+        in_specs=[
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),  # mixing pinned
+            pl.BlockSpec((n_pad, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n_pad, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), updates.dtype),
+        interpret=interpret,
+    )(m, x)
+    return out[:n, :d]

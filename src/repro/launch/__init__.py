@@ -1,0 +1,7 @@
+"""Production launch layer: meshes, sharding rules, input specs, step
+builders, the multi-pod dry-run, roofline extraction, and the train CLI.
+
+NOTE: ``repro.launch.dryrun`` must be executed as its own process (it sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax
+initializes); everything else here is import-safe.
+"""

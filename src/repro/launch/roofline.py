@@ -1,0 +1,119 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the
+TARGET hardware (TPU v5e):
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS          (197 TF/s bf16)
+    memory     = HLO_bytes_per_chip / HBM_BW              (819 GB/s)
+    collective = collective_bytes_per_chip / LINK_BW      (~50 GB/s/link)
+
+``cost_analysis()`` of the compiled executable gives per-chip FLOPs and
+bytes (the module is already SPMD-partitioned).  Collective bytes are NOT
+in cost_analysis: we parse the optimized HLO and sum the *output* operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (output shapes in the partitioned module are per-chip,
+so the sum is per-chip traffic; an all-reduce of a replicated buffer
+counts its full ring volume approximately once — a standard first-order
+model, documented in EXPERIMENTS.md).
+
+MODEL_FLOPS uses the 6·N·D (train) / 2·N·D (inference) convention with
+N = active parameters (MoE discounts unrouted experts).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+import numpy as np
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-op-type output bytes of communication ops in optimized HLO."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for c in _COLLECTIVES:
+            # match the op name as the instruction, not inside metadata
+            if re.search(rf"\)?\s{c}(?:-start|-done)?\(", rhs) or rhs.startswith(c):
+                # shape segment = everything before the op name
+                idx = rhs.find(c)
+                out[c] += _shape_bytes(rhs[:idx])
+                break
+    return out
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    coll_bytes_per_chip: float,
+) -> Dict[str, float]:
+    compute = flops_per_chip / PEAK_FLOPS
+    memory = bytes_per_chip / HBM_BW
+    collective = coll_bytes_per_chip / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful-work reference)
+# ---------------------------------------------------------------------------
+
+
+def count_params_split(params_spec: Any, n_experts: int, top_k: int) -> Dict[str, float]:
+    """Total and active parameter counts from a ShapeDtypeStruct pytree."""
+    import jax
+
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_spec)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        if n_experts > 0 and re.search(r"ffns?.*/(wg|wu|wd)$", pstr) and leaf.ndim >= 3:
+            expert += n
+    active = total
+    if n_experts > 0 and expert:
+        active = total - expert * (1.0 - top_k / n_experts)
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(kind: str, n_active: float, tokens: float) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference forward."""
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens

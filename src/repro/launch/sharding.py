@@ -1,0 +1,239 @@
+"""Sharding rules: PartitionSpecs for params, batches and caches per arch.
+
+Parameter rules are path-pattern based (megatron-style tensor parallelism
+over the ``model`` axis):
+
+  * embeddings / lm_head           — vocab over ``model``
+  * attention q/o projections      — heads over ``model``
+  * attention k/v projections      — heads over ``model`` when the kv-head
+    count divides the axis, else the d_model dim (GQA kv=8 < 16, MQA kv=1)
+  * MLP up/gate | down             — d_ff over ``model`` (col | row)
+  * MoE experts                    — expert axis over ``model`` when E
+    divides it (dbrx/jamba E=16), else d_ff inside experts (granite E=40)
+  * mamba / rwkv projections       — inner channel dim over ``model``
+  * norms, scalars                 — replicated
+
+In ``per_client`` FL mode params stay *replicated over the client axes*
+(each client's divergent copy appears only inside the vmapped round body,
+pinned to the data axis via ``spmd_axis_name``).  In ``client_sequential``
+mode params are additionally sharded over the client/data axes FSDP-style
+on the largest divisible dim.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+Params = Any
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in path
+    )
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % _axis_size(mesh, axis) == 0 and _axis_size(mesh, axis) > 1
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # pattern on the path suffix -> spec template applied to the LAST ndims
+    # (None entries replicate; "model" shards over the model axis).
+    (r"embed$", ("model", None)),
+    (r"lm_head$", (None, "model")),
+    (r"frontend_proj$|proj$", (None, "model")),
+    # attention
+    (r"attn.*/wq$|self/wq$|cross/wq$|mixers/l\d+/wq$", (None, "model", None)),
+    (r"wk$|wv$", (None, "model", None)),  # checked for divisibility below
+    (r"wo$", ("model", None, None)),
+    # dense mlp (2D weights named wg/wu/wd under ffn etc.)
+    (r"wg$|wu$", (None, "model")),
+    (r"wd$", ("model", None)),
+    # moe (3D expert-stacked; expert axis first)
+    (r"router$", (None, None)),
+    # mamba / rwkv projections
+    (r"w_in$", (None, "model")),
+    (r"w_out$", ("model", None)),
+    (r"wr$", (None, "model")),
+    (r"tm/wk$|tm/wv$|tm/wg$", (None, "model")),
+    (r"cm/wk$", (None, "model")),
+    (r"cm/wv$", ("model", None)),
+    (r"tm/wo$", ("model", None)),
+    (r"wa$", (None, None)),
+    (r"wb$", (None, None)),
+)
+
+
+def _param_spec(path: str, shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh,
+                fsdp_axes: Tuple[str, ...] = ()) -> P:
+    ndim = len(shape)
+    spec: list = [None] * ndim
+
+    def fill_from_template(tmpl):
+        # align template to the trailing dims (leading dims are layer stacks)
+        off = ndim - len(tmpl)
+        for i, ax in enumerate(tmpl):
+            if ax is not None and _divisible(shape[off + i], mesh, ax):
+                spec[off + i] = ax
+
+    # MoE expert tensors: (.., E, d, f) / (.., E, f, d)
+    if re.search(r"ffns?.*/(wg|wu|wd)$", path) and ndim >= 3 and cfg.n_experts > 0:
+        e_dim = ndim - 3
+        if _divisible(shape[e_dim], mesh, "model"):
+            spec[e_dim] = "model"  # expert parallelism
+        else:
+            # tensor parallelism inside experts: shard the f dim
+            f_dim = ndim - 2 if path.endswith("wd") else ndim - 1
+            if _divisible(shape[f_dim], mesh, "model"):
+                spec[f_dim] = "model"
+        return _with_fsdp(path, spec, shape, mesh, fsdp_axes)
+
+    # kv projections with few heads: fall back to sharding d_model
+    if re.search(r"wk$|wv$", path) and ndim >= 3:
+        off = ndim - 3
+        if _divisible(shape[off + 1], mesh, "model"):
+            spec[off + 1] = "model"
+        elif _divisible(shape[off], mesh, "model"):
+            spec[off] = "model"
+        return _with_fsdp(path, spec, shape, mesh, fsdp_axes)
+
+    for pat, tmpl in _RULES:
+        if re.search(pat, path) and ndim >= len(tmpl):
+            fill_from_template(tmpl)
+            break
+    return _with_fsdp(path, spec, shape, mesh, fsdp_axes)
+
+
+def _with_fsdp(path, spec, shape, mesh, fsdp_axes) -> P:
+    """client_sequential: additionally shard the largest free dim over the
+    client/data axes (ZeRO-3-style fully sharded storage)."""
+    if fsdp_axes:
+        n = int(np.prod([_axis_size(mesh, a) for a in fsdp_axes]))
+        if n > 1:
+            free = [i for i, s in enumerate(spec) if s is None]
+            # prefer the largest divisible free dim
+            free.sort(key=lambda i: -shape[i])
+            for i in free:
+                if shape[i] % n == 0:
+                    spec[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                    break
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, params_shape: Params, mesh: Mesh,
+                    *, fsdp: bool = False) -> Params:
+    """NamedShardings for a params (shape) pytree."""
+    from repro.launch.mesh import client_axes
+
+    fsdp_axes = client_axes(mesh) if fsdp else ()
+
+    def f(path, leaf):
+        spec = _param_spec(_path_str(path), leaf.shape, cfg, mesh, fsdp_axes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def train_batch_shardings(mesh: Mesh, mode: str, batch_shape: Params) -> Params:
+    """Train batches.  per_client: leading client dim over the client axes.
+    client_sequential: per-step batch dim (axis 2) over the client axes."""
+    from repro.launch.mesh import client_axes
+
+    ca = client_axes(mesh)
+    caxis = ca if len(ca) > 1 else ca[0]
+
+    def f(path, leaf):
+        ndim = len(leaf.shape)
+        spec = [None] * ndim
+        if mode == "weighted_flat":
+            # (C*B, ...) — fully shard the flat batch when it covers the mesh
+            full = (*ca, "model")
+            n_full = 1
+            for a in full:
+                n_full *= mesh.shape[a]
+            spec[0] = full if leaf.shape[0] % n_full == 0 else caxis
+        elif mode in ("per_client", "weighted_grad"):
+            spec[0] = caxis  # (C, [T,] B, ...): client dim over client axes
+        else:  # client_sequential: shard the per-step batch dim instead
+            if ndim >= 3:
+                spec[2] = caxis  # (C, T, B, ...) -> shard B
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, batch_shape)
+
+
+def serve_batch_sharding(mesh: Mesh, shape: Tuple[int, ...]) -> NamedSharding:
+    """Serving batch (B, ...): batch over client axes when divisible."""
+    from repro.launch.mesh import client_axes, n_clients
+
+    ca = client_axes(mesh)
+    caxis = ca if len(ca) > 1 else ca[0]
+    spec = [None] * len(shape)
+    if shape[0] % n_clients(mesh) == 0 and shape[0] > 1:
+        spec[0] = caxis
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape: Params) -> Params:
+    """KV caches (L, B, S, KV, hd) / recurrent states (L, B, H, ...).
+
+    Batch shards over the client axes when divisible; heads shard over
+    ``model`` when divisible, else the sequence dim shards over ``model``
+    (sequence-parallel cache; attention then all-reduces over ``model``).
+    """
+    from repro.launch.mesh import client_axes, n_clients
+
+    ca = client_axes(mesh)
+    caxis = ca if len(ca) > 1 else ca[0]
+    nc = n_clients(mesh)
+
+    def f(path, leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        spec = [None] * ndim
+        p = _path_str(path)
+        if ndim >= 2 and shape[1] % nc == 0 and shape[1] > 1:
+            spec[1] = caxis  # batch dim
+        if re.search(r"(^|/)(k|v)$", p) and ndim >= 5:
+            if _divisible(shape[3], mesh, "model"):
+                spec[3] = "model"  # kv heads
+            elif _divisible(shape[2], mesh, "model"):
+                spec[2] = "model"  # sequence-parallel cache
+        elif re.search(r"ssm$|wkv$", p) and ndim >= 3:
+            if _divisible(shape[2], mesh, "model"):
+                spec[2] = "model"  # recurrent-state heads
+        elif re.search(r"memory$", p) and ndim == 3:
+            if _divisible(shape[2], mesh, "model"):
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def replicated(mesh: Mesh, tree: Params) -> Params:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

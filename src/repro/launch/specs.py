@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, zero device allocation).
+
+``input_specs(arch_id, shape_name, mesh)`` returns a dict:
+  train:   params/server_state/batches/tau_up/tau_dd/A  (the FL round)
+  prefill: params/batch
+  decode:  params/cache/token/pos
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, get_arch
+from repro.models import build
+from repro.models.common import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+DRYRUN_LOCAL_STEPS = 2  # T for the dry-run round (paper uses 8; FLOPs scale linearly)
+
+
+def _sds_like(tree: Any) -> Any:
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def params_spec(bundle) -> Any:
+    return jax.eval_shape(lambda k: bundle.init(k), jax.random.PRNGKey(0))
+
+
+def _train_batch_spec(cfg: ModelConfig, n_clients: int, shape, mode: str) -> Dict[str, SDS]:
+    S = shape.seq_len
+    B = shape.global_batch // n_clients
+    assert B >= 1, (shape.name, n_clients)
+    if mode == "weighted_flat":  # flat T = 1 round: (C*B, ...) batches
+        lead = (shape.global_batch,)
+    elif mode == "weighted_grad":  # T = 1 collapse: (C, B, ...) batches
+        lead = (n_clients, B)
+    else:
+        lead = (n_clients, DRYRUN_LOCAL_STEPS, B)
+    spec = {
+        "tokens": SDS((*lead, S), jnp.int32),
+        "labels": SDS((*lead, S), jnp.int32),
+    }
+    if cfg.frontend_tokens:
+        spec["prefix"] = SDS((*lead, cfg.frontend_tokens, cfg.d_model), cfg.jdtype)
+    return spec
+
+
+def input_specs(arch_id: str, shape_name: str, mesh, cfg: ModelConfig | None = None,
+                fl_mode: str | None = None) -> Dict[str, Any]:
+    """All lowering inputs for one (arch x input-shape) combination."""
+    from repro.launch.mesh import n_clients as mesh_clients
+
+    if cfg is None:
+        cfg = get_arch(arch_id).full()
+    fl_mode = fl_mode or cfg.fl_mode
+    bundle = build(cfg)
+    shape = INPUT_SHAPES[shape_name]
+    C = mesh_clients(mesh)
+
+    if shape.kind == "train":
+        pspec = params_spec(bundle)
+        from repro.optim import sgd_momentum
+
+        sstate_spec = jax.eval_shape(
+            lambda p: sgd_momentum(1.0, beta=0.9).init(p), pspec
+        )
+        return {
+            "kind": "train",
+            "cfg": cfg,
+            "params": pspec,
+            "server_state": sstate_spec,
+            "batches": _train_batch_spec(cfg, C, shape, fl_mode),
+            "tau_up": SDS((C,), jnp.float32),
+            "tau_dd": SDS((C, C), jnp.float32),
+            "A": SDS((C, C), jnp.float32),
+        }
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        batch: Dict[str, Any] = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.frontend_tokens:
+            batch["prefix"] = SDS((B, cfg.frontend_tokens, cfg.d_model), cfg.jdtype)
+        return {"kind": "prefill", "cfg": cfg, "params": params_spec(bundle), "batch": batch}
+
+    # decode: one new token against a seq_len-deep cache
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.arch_type in ("encdec", "audio"):
+        cache_spec = jax.eval_shape(lambda: bundle.init_cache(B, S, cfg.frontend_tokens))
+    else:
+        cache_spec = jax.eval_shape(lambda: bundle.init_cache(B, S))
+    return {
+        "kind": "decode",
+        "cfg": cfg,
+        "params": params_spec(bundle),
+        "cache": cache_spec,
+        "token": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }

@@ -1,0 +1,173 @@
+"""Step builders + sharding assembly for the production launch/dry-run.
+
+``build_step(arch_id, shape_name, mesh, ...)`` returns
+``(step_fn, specs, in_shardings, out_shardings)`` ready for
+
+    with mesh:
+        jax.jit(step_fn, in_shardings=..., out_shardings=...).lower(**specs)
+
+Step kinds per input shape (see configs/base.py):
+  train_4k               -> one full ColRel FL round (T local SGD steps,
+                            relay consensus, blind PS sum, PS momentum)
+  prefill_32k            -> forward logits
+  decode_32k / long_500k -> one-token serve step against a deep KV cache
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_arch
+from repro.core.aggregation import Aggregation
+from repro.fl.round import RoundConfig, make_round_fn
+
+
+def get_arch_cfg(arch_id: str):
+    return get_arch(arch_id).full()
+from repro.launch import sharding as shard_rules
+from repro.launch.mesh import client_axes, n_clients
+from repro.launch.specs import DRYRUN_LOCAL_STEPS, input_specs
+from repro.models import build
+from repro.optim import sgd, sgd_momentum
+
+# Paper hyperparameters carried into the production round.
+CLIENT_LR = 0.05
+CLIENT_WD = 1e-4
+SERVER_MOMENTUM = 0.9
+
+
+def build_step(
+    arch_id: str,
+    shape_name: str,
+    mesh,
+    *,
+    aggregation: Aggregation = Aggregation.COLREL,
+    fl_mode: str | None = None,
+    cfg_override=None,
+) -> Tuple[Any, Dict[str, Any], Any, Any]:
+    mode = fl_mode or (cfg_override or get_arch_cfg(arch_id)).fl_mode
+    specs = input_specs(arch_id, shape_name, mesh, cfg=cfg_override, fl_mode=mode)
+    cfg = specs["cfg"]
+    fsdp = mode in ("client_sequential", "weighted_grad", "weighted_flat")
+    ca = client_axes(mesh)
+
+    if cfg.n_experts > 0:
+        # expert-parallel dispatch buffers (all step kinds)
+        if cfg.n_experts % mesh.shape["model"] == 0:
+            cfg = cfg.replace(moe_buf_spec=("model", None, None))
+        else:
+            cfg = cfg.replace(moe_buf_spec=(None, "model", None))
+        specs["cfg"] = cfg
+
+    caxis_spec = ca if len(ca) > 1 else ca[0]
+    if specs["kind"] == "train":
+        # Residual-stream layout (see repro/dist/constraints.py):
+        #  * fsdp (ZeRO) giants: per-client batch over the model axis when it
+        #    divides, else sequence over model — makes the partitioner gather
+        #    weights instead of all-reducing activation partials.
+        #  * per_client archs: Megatron-SP-style sequence sharding over the
+        #    model axis (the client lane is already pinned to the data axes
+        #    via spmd_axis_name; without this, backward intermediates
+        #    replicate over the model axis).
+        C = n_clients(mesh)
+        from repro.configs.base import INPUT_SHAPES
+
+        B = INPUT_SHAPES[shape_name].global_batch // C
+        if mode == "weighted_flat":
+            # pin the flat batch to the full-mesh layout at every block
+            # boundary (without this the partitioner drifts to replication)
+            gb = INPUT_SHAPES[shape_name].global_batch
+            full = (*ca, "model")
+            n_full = 1
+            for a in full:
+                n_full *= mesh.shape[a]
+            if gb % n_full == 0:
+                cfg = cfg.replace(act_spec=(full, None, None))
+            else:
+                cfg = cfg.replace(act_spec=(caxis_spec, "model", None))
+        elif fsdp and B % mesh.shape["model"] == 0:
+            cfg = cfg.replace(act_spec=("model", None, None))
+        else:
+            cfg = cfg.replace(act_spec=(None, "model", None))
+        specs["cfg"] = cfg
+    elif specs["kind"] == "prefill" and (fsdp or cfg.n_experts == 0):
+        # prefill: batch over the client axes, sequence over model.
+        # (skipped for per_client MoE archs — sequence-sharded tokens fight
+        # the capacity-dispatch scatter and regress memory; measured on
+        # granite: 31 GB -> 122 GB with the constraint.)
+        cfg = cfg.replace(act_spec=(caxis_spec, "model", None))
+        specs["cfg"] = cfg
+    bundle = build(cfg)
+
+    if specs["kind"] == "train":
+        rc = RoundConfig(
+            n_clients=n_clients(mesh),
+            local_steps=DRYRUN_LOCAL_STEPS,
+            mode=mode,
+            aggregation=aggregation,
+            spmd_axes=ca if mode in ("per_client", "weighted_grad") else None,
+            unroll=getattr(cfg, "scan_unroll", False),
+        )
+        psh = shard_rules.param_shardings(cfg, specs["params"], mesh, fsdp=fsdp)
+        round_fn = make_round_fn(
+            bundle.loss_fn,
+            sgd(CLIENT_LR, weight_decay=CLIENT_WD),
+            sgd_momentum(1.0, beta=SERVER_MOMENTUM),
+            rc,
+            grad_shardings=psh if fsdp else None,
+        )
+        ssh = shard_rules.param_shardings(cfg, specs["server_state"], mesh, fsdp=fsdp)
+        bsh = shard_rules.train_batch_shardings(mesh, mode, specs["batches"])
+        rep = NamedSharding(mesh, P())
+        in_sh = (psh, ssh, bsh, rep, rep, rep)
+        metrics_sh = {"loss": rep, "delta_norm": rep, "participation": rep}
+        out_sh = (psh, ssh, metrics_sh)
+        lower_args = (
+            specs["params"],
+            specs["server_state"],
+            specs["batches"],
+            specs["tau_up"],
+            specs["tau_dd"],
+            specs["A"],
+        )
+        return round_fn, lower_args, in_sh, out_sh
+
+    if specs["kind"] == "prefill":
+
+        def prefill_step(params, batch):
+            # serving prefill: populate activations, emit last-position
+            # logits only (the full (B, S, V) tensor is never needed).
+            return bundle.forward(params, batch)[:, -1, :]
+
+        psh = shard_rules.param_shardings(cfg, specs["params"], mesh, fsdp=fsdp)
+        bsh = jax.tree.map(
+            lambda s: shard_rules.serve_batch_sharding(mesh, s.shape), specs["batch"]
+        )
+        B, S = specs["batch"]["tokens"].shape
+        caxis = ca if len(ca) > 1 else ca[0]
+        logits_spec = [None, "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None]
+        if B % n_clients(mesh) == 0 and B > 1:
+            logits_spec[0] = caxis
+        out_sh = NamedSharding(mesh, P(*logits_spec))
+        return prefill_step, (specs["params"], specs["batch"]), (psh, bsh), out_sh
+
+    # decode
+    def serve_step(params, cache, token, pos):
+        return bundle.decode_step(params, cache, token, pos)
+
+    psh = shard_rules.param_shardings(cfg, specs["params"], mesh, fsdp=fsdp)
+    csh = shard_rules.cache_shardings(cfg, mesh, specs["cache"])
+    tsh = shard_rules.serve_batch_sharding(mesh, specs["token"].shape)
+    rep = NamedSharding(mesh, P())
+    B = specs["token"].shape[0]
+    caxis = ca if len(ca) > 1 else ca[0]
+    lspec = [None, "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None]
+    if B % n_clients(mesh) == 0 and B > 1:
+        lspec[0] = caxis
+    out_sh = (NamedSharding(mesh, P(*lspec)), csh)
+    in_sh = (psh, csh, tsh, rep)
+    lower_args = (specs["params"], specs["cache"], specs["token"], specs["pos"])
+    return serve_step, lower_args, in_sh, out_sh

@@ -1,0 +1,5 @@
+from .common import ModelConfig, count_params
+from .cnn import CNNConfig
+from .registry import ModelBundle, build
+
+__all__ = ["ModelConfig", "CNNConfig", "ModelBundle", "build", "count_params"]

@@ -1,0 +1,240 @@
+"""Grouped-query attention with RoPE, qk-norm, sliding windows, KV caches.
+
+One implementation serves every attention-bearing arch in the zoo:
+  * GQA with arbitrary kv-head count (MQA when n_kv_heads == 1, gemma3).
+  * Optional per-head RMS qk_norm (qwen3).
+  * Optional sliding-window masking (gemma3 local layers).
+  * Optional logit soft-capping.
+  * Self- or cross-attention (seamless-m4t decoder).
+  * Single-token decode against a preallocated KV cache.
+
+The jnp path below is the reference; ``repro.kernels.flash_attention``
+provides the Pallas TPU kernel for long-sequence prefill and is selected
+via ``use_flash=True`` in the callers (``repro/models/transformer.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Params, apply_rope, dense_init, rms_head_norm, split_keys
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key, *, cross: bool = False) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = split_keys(key, ["wq", "wk", "wv", "wo", "qs", "ks"])
+    p = {
+        "wq": dense_init(ks["wq"], (d, H, hd), cfg.jdtype),
+        "wk": dense_init(ks["wk"], (d, KV, hd), cfg.jdtype),
+        "wv": dense_init(ks["wv"], (d, KV, hd), cfg.jdtype),
+        "wo": dense_init(ks["wo"], (H, hd, d), cfg.jdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.jdtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.jdtype)
+    del cross  # same parameter structure; kv source differs at apply time
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Masking helpers
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(tq: int, tk: int, *, offset: int = 0, window: Optional[int] = None) -> jax.Array:
+    """(tq, tk) boolean mask; query position i attends key j iff
+    j <= i + offset (and i + offset - j < window when sliding)."""
+    qi = jnp.arange(tq)[:, None] + offset
+    kj = jnp.arange(tk)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= (qi - kj) < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Core attention
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q, k, v, mask, softcap: Optional[float]) -> jax.Array:
+    """q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H,hd).  fp32 softmax."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, T, KV, G, hd)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qf, kf) / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def _chunked_causal_sdpa(
+    q, k, v, window, softcap: Optional[float], chunk: int, unroll: bool
+) -> jax.Array:
+    """Query-blocked causal attention: memory O(chunk x S) per block.
+
+    ``window`` may be a traced scalar (per-layer sliding windows inside a
+    layer scan).  Each block body is checkpointed so the backward pass
+    recomputes its (chunk x S) logits instead of storing all of them.
+    """
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    nq = T // chunk
+    qb = q.reshape(B, nq, chunk, H, hd).transpose(1, 0, 2, 3, 4)  # (nq,B,c,H,hd)
+    offs = jnp.arange(nq) * chunk
+
+    def block(qi, off):
+        kj = jnp.arange(S)[None, :]
+        qidx = off + jnp.arange(chunk)[:, None]
+        m = kj <= qidx
+        if window is not None:
+            m &= (qidx - kj) < window
+        return _sdpa(qi, k, v, m, softcap)
+
+    block = jax.checkpoint(block)
+
+    def body(_, xs):
+        qi, off = xs
+        return None, block(qi, off)
+
+    _, ob = jax.lax.scan(body, None, (qb, offs), unroll=nq if unroll else 1)
+    return ob.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+
+
+def banded_causal_sdpa(
+    q, k, v, window: int, softcap: Optional[float], chunk: int
+) -> jax.Array:
+    """Statically-banded sliding-window attention: each query block only
+    reads the (window + chunk) keys it can see.  FLOPs and memory are
+    O(T * (window + chunk)) instead of O(T * S) — the static specialization
+    of gemma3-style local layers (window must be a python int)."""
+    B, T, H, hd = q.shape
+    band = window + chunk  # static band width
+    outs = []
+    for o in range(0, T, chunk):
+        qi = q[:, o : o + chunk]
+        start = max(0, o + chunk - band)
+        width = min(band, o + chunk)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, width, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, width, axis=1)
+        qidx = o + jnp.arange(chunk)[:, None]
+        kidx = start + jnp.arange(width)[None, :]
+        m = (kidx <= qidx) & ((qidx - kidx) < window)
+        outs.append(_sdpa(qi, kb, vb, m, softcap))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,
+    *,
+    positions: Optional[jax.Array] = None,
+    kv_source: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    window: Optional[jax.Array] = None,
+    static_window: Optional[int] = None,
+    causal: bool = True,
+    use_flash: bool = False,
+) -> jax.Array:
+    """Full-sequence attention.  ``kv_source`` switches to cross-attention
+    (no causal mask, no RoPE sharing assumptions beyond positions given)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    src = x if kv_source is None else kv_source
+    S = src.shape[1]
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if cfg.qk_norm:
+        q = rms_head_norm(q, params["q_norm"])
+        k = rms_head_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    is_self_causal = kv_source is None and causal
+    if is_self_causal and static_window is not None and T > cfg.attn_chunk:
+        out = banded_causal_sdpa(
+            q, k, v, static_window, cfg.attn_logit_softcap, cfg.attn_chunk
+        )
+    elif use_flash and is_self_causal and window is None:
+        from repro.kernels import ops as _kops
+
+        out = _kops.flash_attention(q, k, v, causal=True)
+    elif is_self_causal and T > cfg.attn_chunk and T % cfg.attn_chunk == 0:
+        out = _chunked_causal_sdpa(
+            q, k, v, window, cfg.attn_logit_softcap, cfg.attn_chunk, cfg.scan_unroll
+        )
+    else:
+        mask = causal_mask(T, S, window=window) if is_self_causal else None
+        out = _sdpa(q, k, v, mask, cfg.attn_logit_softcap)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, layers_shape=()) -> Params:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    shape = (*layers_shape, batch, max_len, KV, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.jdtype),
+        "v": jnp.zeros(shape, cfg.jdtype),
+    }
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,
+    cache: Params,
+    pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> tuple[jax.Array, Params]:
+    """One-token decode.  x (B, 1, d); cache k/v (B, S, KV, hd); ``pos`` the
+    scalar index being written.  Returns (output (B,1,d), updated cache)."""
+    B, _, _ = x.shape
+    S = cache["k"].shape[1]
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k_new = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v_new = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_head_norm(q, params["q_norm"])
+        k_new = rms_head_norm(k_new, params["k_norm"])
+    posb = jnp.broadcast_to(pos, (B, 1))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+
+    idx = jnp.arange(S)
+    valid = idx <= pos
+    if window is not None:
+        valid &= (pos - idx) < window
+    mask = valid[None, :]  # (1, S) -> broadcast as (tq=1, tk=S)
+    out = _sdpa(q, k, v, mask, cfg.attn_logit_softcap)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, {"k": k, "v": v}

@@ -1,0 +1,117 @@
+"""ResNet-20-style CNN for the paper's own CIFAR-10 experiment.
+
+The paper trains ResNet-20 with BatchNorm; in the federated setting
+BatchNorm statistics leak across the client/consensus boundary and are a
+known FL pathology, so we use GroupNorm (8 groups) — a standard FL
+substitution (noted in DESIGN.md §7).  Pure JAX, NHWC.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, softmax_cross_entropy, split_keys
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "resnet20"
+    n_classes: int = 10
+    widths: Tuple[int, int, int] = (16, 32, 64)
+    blocks_per_stage: int = 3
+    image_size: int = 32
+    channels: int = 3
+    groups: int = 8
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def _conv_init(key, k, cin, cout, dtype):
+    fan_in = k * k * cin
+    std = (2.0 / fan_in) ** 0.5
+    return (jax.random.normal(key, (k, k, cin, cout), jnp.float32) * std).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _gn_init(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _gn(x, p, groups, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xf = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = xf.mean((1, 2, 4), keepdims=True)
+    var = xf.var((1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+def init_cnn(cfg: CNNConfig, key) -> Params:
+    ks = split_keys(key, ["stem", "stages", "fc"])
+    params: Params = {
+        "stem": {"w": _conv_init(ks["stem"], 3, cfg.channels, cfg.widths[0], cfg.jdtype),
+                 "gn": _gn_init(cfg.widths[0], cfg.jdtype)},
+        "stages": [],
+    }
+    cin = cfg.widths[0]
+    skeys = jax.random.split(ks["stages"], len(cfg.widths) * cfg.blocks_per_stage * 3)
+    ki = 0
+    for s, cout in enumerate(cfg.widths):
+        stage = []
+        for b in range(cfg.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            blk = {
+                "w1": _conv_init(skeys[ki], 3, cin, cout, cfg.jdtype),
+                "gn1": _gn_init(cout, cfg.jdtype),
+                "w2": _conv_init(skeys[ki + 1], 3, cout, cout, cfg.jdtype),
+                "gn2": _gn_init(cout, cfg.jdtype),
+            }
+            if stride != 1 or cin != cout:
+                blk["wproj"] = _conv_init(skeys[ki + 2], 1, cin, cout, cfg.jdtype)
+            ki += 3
+            stage.append(blk)
+            cin = cout
+        params["stages"].append(stage)
+    fk = jax.random.split(ks["fc"], 1)[0]
+    params["fc"] = {
+        "w": (jax.random.normal(fk, (cin, cfg.n_classes), jnp.float32) * 0.01).astype(cfg.jdtype),
+        "b": jnp.zeros((cfg.n_classes,), cfg.jdtype),
+    }
+    return params
+
+
+def forward(cfg: CNNConfig, params: Params, images: Array) -> Array:
+    """images (B, H, W, C) -> logits (B, n_classes)."""
+    x = images.astype(cfg.jdtype)
+    x = jax.nn.relu(_gn(_conv(x, params["stem"]["w"]), params["stem"]["gn"], cfg.groups))
+    for s, stage in enumerate(params["stages"]):
+        for b, blk in enumerate(stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = jax.nn.relu(_gn(_conv(x, blk["w1"], stride), blk["gn1"], cfg.groups))
+            h = _gn(_conv(h, blk["w2"]), blk["gn2"], cfg.groups)
+            sc = _conv(x, blk["wproj"], stride) if "wproj" in blk else x
+            x = jax.nn.relu(h + sc)
+    x = x.mean((1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def loss_fn(cfg: CNNConfig, params: Params, batch: dict):
+    logits = forward(cfg, params, batch["images"])
+    loss = jnp.mean(softmax_cross_entropy(logits, batch["labels"]))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    return loss, {"ce": loss, "acc": acc}

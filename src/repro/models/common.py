@@ -1,0 +1,204 @@
+"""Shared model-definition substrate: config, norms, RoPE, initializers.
+
+Parameters are plain nested dicts of ``jax.Array`` (pytrees).  Layer stacks
+are stored *stacked along a leading layer axis* and consumed with
+``jax.lax.scan`` so that compile time and HLO size are O(1) in depth — a
+hard requirement for lowering the 62/72-layer production configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict pytree
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Union config covering every assigned architecture family."""
+
+    name: str = "model"
+    arch_type: str = "dense"  # dense | moe | ssm | hybrid | encdec | vlm | audio | cnn
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    d_ff: int = 512
+    vocab_size: int = 256
+    max_seq_len: int = 4096
+    # --- norms / attention details ---
+    norm: str = "rmsnorm"  # rmsnorm | layernorm | nonparametric_ln
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    mlp: str = "swiglu"  # swiglu | gelu | relu_sq
+    attn_logit_softcap: Optional[float] = None
+    # sliding-window attention: window size; pattern = how many local layers
+    # per global layer (gemma3: 5 local : 1 global).
+    sliding_window: Optional[int] = None
+    local_global_ratio: Optional[int] = None  # e.g. 5 -> layers 0-4 local, 5 global
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: Optional[int] = None  # defaults to d_ff
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- SSM / hybrid ---
+    ssm_d_state: int = 16
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    ssm_heads: Optional[int] = None  # Mamba2-style heads; default d_inner // 64
+    attn_every: int = 0  # hybrid: one attention layer per this many layers
+    moe_every: int = 0  # hybrid: MoE MLP on layers where (l % moe_every)==moe_every-1
+    # --- enc-dec / multimodal ---
+    n_encoder_layers: int = 0
+    frontend_tokens: int = 0  # audio frames / vision patches provided by stub
+    # --- dtype / memory ---
+    dtype: str = "float32"  # activation/param dtype for this instantiation
+    remat: bool = True  # rematerialize each layer in backward (training)
+    # unroll structural scans (layers/local-steps) — used by the dry-run's
+    # shallow cost probes so XLA's cost_analysis sees every layer body.
+    scan_unroll: bool = False
+    # self-attention switches to the query-blocked streaming path (memory
+    # O(block x S) instead of O(T x S)) when seq length exceeds this.
+    attn_chunk: int = 2048
+    # optional PartitionSpec tuple for the trailing (batch, seq, d) dims of
+    # the residual stream — see repro/dist/constraints.py.
+    act_spec: Optional[tuple] = None
+    # optional PartitionSpec tuple for the MoE (E, capacity, d) dispatch
+    # buffers (expert parallelism when E divides the model axis, else
+    # capacity sharding); set by the launch layer.
+    moe_buf_spec: Optional[tuple] = None
+    # unroll the layer stack with per-layer STATIC windows: sliding-window
+    # layers get the banded O(T*window) attention path instead of computing
+    # (and masking) the full T x S score matrix (§Perf, gemma3 prefill).
+    static_window_pattern: bool = False
+    # --- FL execution (see repro/fl) ---
+    fl_mode: str = "per_client"  # per_client | client_sequential | weighted_grad
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads if self.ssm_heads is not None else max(1, self.d_inner // 64)
+
+    @property
+    def ffe(self) -> int:
+        return self.d_ff_expert if self.d_ff_expert is not None else self.d_ff
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (LeCun-ish), the zoo default."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, names: Sequence[str]):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dim: int) -> Params:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((dim,), cfg.jdtype)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), cfg.jdtype), "bias": jnp.zeros((dim,), cfg.jdtype)}
+    if cfg.norm == "nonparametric_ln":  # OLMo: LN without affine params
+        return {}
+    raise ValueError(f"unknown norm {cfg.norm}")
+
+
+def apply_norm(cfg: ModelConfig, params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * inv).astype(x.dtype) * params["scale"]
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        return y.astype(x.dtype) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)  # non-parametric
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm used for qk_norm (Qwen3-style)."""
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv).astype(x.dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # (D/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., T, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses / misc
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-level CE; logits (..., V), labels (...) int32.  fp32 internally."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def count_params(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

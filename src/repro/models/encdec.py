@@ -1,0 +1,175 @@
+"""Encoder–decoder backbone (seamless-m4t-style, speech-to-text direction).
+
+Per the assignment carve-out, the modality frontend (mel-spectrogram +
+conv feature extractor) is a stub: ``input_specs()`` hands the encoder a
+precomputed frame-embedding sequence of shape (B, frames, d_model).  The
+backbone — a bidirectional transformer encoder plus a causal decoder with
+cross-attention — is fully implemented and trained federatedly.
+
+The assigned "24L" is split 24 encoder + 24 decoder layers, matching the
+T2TT component of SeamlessM4T-large (see configs/seamless_m4t_large_v2.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from .common import (
+    ModelConfig,
+    Params,
+    apply_norm,
+    dense_init,
+    embed_init,
+    init_norm,
+    softmax_cross_entropy,
+    split_keys,
+)
+
+Array = jax.Array
+
+
+def _init_enc_block(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, ["attn", "ffn"])
+    return {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "attn": attn_mod.init_attention(cfg, ks["attn"]),
+        "ln2": init_norm(cfg, cfg.d_model),
+        "ffn": mlp_mod.init_mlp(cfg, ks["ffn"]),
+    }
+
+
+def _init_dec_block(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, ["self", "cross", "ffn"])
+    return {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "self": attn_mod.init_attention(cfg, ks["self"]),
+        "ln_x": init_norm(cfg, cfg.d_model),
+        "cross": attn_mod.init_attention(cfg, ks["cross"], cross=True),
+        "ln2": init_norm(cfg, cfg.d_model),
+        "ffn": mlp_mod.init_mlp(cfg, ks["ffn"]),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, ["embed", "enc", "dec", "head", "front"])
+    enc_keys = jax.random.split(ks["enc"], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks["dec"], cfg.n_layers)
+    return {
+        "frontend_proj": dense_init(ks["front"], (cfg.d_model, cfg.d_model), cfg.jdtype),
+        "embed": embed_init(ks["embed"], (cfg.vocab_size, cfg.d_model), cfg.jdtype),
+        "encoder": jax.vmap(lambda k: _init_enc_block(cfg, k))(enc_keys),
+        "enc_norm": init_norm(cfg, cfg.d_model),
+        "decoder": jax.vmap(lambda k: _init_dec_block(cfg, k))(dec_keys),
+        "final_norm": init_norm(cfg, cfg.d_model),
+        "lm_head": dense_init(ks["head"], (cfg.d_model, cfg.vocab_size), cfg.jdtype),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: Array, *, use_flash: bool = False) -> Array:
+    """frames (B, F, d) stub frontend embeddings -> encoder memory (B, F, d)."""
+    x = frames.astype(cfg.jdtype) @ params["frontend_proj"]
+
+    def blk(lp, x):
+        from repro.dist.constraints import constrain_act
+
+        x = constrain_act(cfg, x)
+        h = attn_mod.attention(
+            cfg, lp["attn"], apply_norm(cfg, lp["ln1"], x), causal=False, use_flash=False
+        )
+        x = x + h
+        h = mlp_mod.apply_mlp(cfg, lp["ffn"], apply_norm(cfg, lp["ln2"], x))
+        return x + h
+
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+
+    def body(x, lp):
+        return blk(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=cfg.n_encoder_layers if cfg.scan_unroll else 1)
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_train(
+    cfg: ModelConfig, params: Params, tokens: Array, memory: Array, *, use_flash: bool = False
+) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def blk(lp, x, memory):
+        from repro.dist.constraints import constrain_act
+
+        x = constrain_act(cfg, x)
+        h = attn_mod.attention(cfg, lp["self"], apply_norm(cfg, lp["ln1"], x), use_flash=use_flash)
+        x = x + h
+        h = attn_mod.attention(
+            cfg, lp["cross"], apply_norm(cfg, lp["ln_x"], x), kv_source=memory, causal=False
+        )
+        x = x + h
+        h = mlp_mod.apply_mlp(cfg, lp["ffn"], apply_norm(cfg, lp["ln2"], x))
+        return x + h
+
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+
+    def body(x, lp):
+        return blk(lp, x, memory), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"], unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x @ params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict, *, use_flash: bool = False):
+    """batch: 'prefix' (B, F, d) frames, 'tokens' (B, T), 'labels' (B, T)."""
+    memory = encode(cfg, params, batch["prefix"], use_flash=use_flash)
+    logits = decode_train(cfg, params, batch["tokens"], memory, use_flash=use_flash)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = softmax_cross_entropy(logits, jnp.maximum(labels, 0))
+    if "ce_weight" in batch:
+        seq_loss = jnp.sum(ce * mask, axis=-1) / jnp.maximum(jnp.sum(mask, -1), 1.0)
+        loss = jnp.sum(batch["ce_weight"].astype(jnp.float32) * seq_loss)
+    else:
+        loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"ce": loss, "moe_aux": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Decode serving: cached self-attention + precomputed cross K/V
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, memory_len: int) -> Params:
+    kv = attn_mod.init_kv_cache(cfg, batch, max_len, layers_shape=(cfg.n_layers,))
+    mem = jnp.zeros((batch, memory_len, cfg.d_model), cfg.jdtype)
+    return {"kv": kv, "memory": mem}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, token: Array, pos: Array):
+    x = jnp.take(params["embed"], token, axis=0)
+    memory = cache["memory"]
+
+    B = token.shape[0]
+    qpos = jnp.broadcast_to(pos, (B, 1))
+
+    def body(x, xs):
+        lp, c = xs
+        h, c = attn_mod.decode_attention(cfg, lp["self"], apply_norm(cfg, lp["ln1"], x), c, pos)
+        x = x + h
+        h = attn_mod.attention(
+            cfg, lp["cross"], apply_norm(cfg, lp["ln_x"], x), kv_source=memory,
+            causal=False, positions=qpos,
+        )
+        x = x + h
+        h = mlp_mod.apply_mlp(cfg, lp["ffn"], apply_norm(cfg, lp["ln2"], x))
+        return x + h, c
+
+    x, kv = jax.lax.scan(body, x, (params["decoder"], cache["kv"]), unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"kv": kv, "memory": memory}

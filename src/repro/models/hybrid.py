@@ -1,0 +1,199 @@
+"""Jamba-style hybrid: Mamba + attention 1:7 interleave with MoE MLPs.
+
+Layer pattern per period of ``attn_every`` (=8) layers:
+  position 0            -> grouped-query attention mixer
+  positions 1..7        -> Mamba (SSD) mixers
+MLP pattern: every ``moe_every``-th (=2) layer carries a MoE MLP
+(odd positions), the rest a dense SwiGLU — matching Jamba's "MoE every
+other layer" at 16 experts / top-2.
+
+The stack is scanned over *periods* (9 for the 72-layer config); inside a
+period the 8 heterogeneous sub-layers are unrolled, so HLO contains one
+period body regardless of depth.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from .common import (
+    ModelConfig,
+    Params,
+    apply_norm,
+    dense_init,
+    embed_init,
+    init_norm,
+    softmax_cross_entropy,
+    split_keys,
+)
+
+Array = jax.Array
+
+
+def _pattern(cfg: ModelConfig):
+    """Static layer pattern within one period."""
+    period = cfg.attn_every
+    attn_pos = [0]
+    mamba_pos = list(range(1, period))
+    moe_pos = [j for j in range(period) if cfg.moe_every and j % cfg.moe_every == 1]
+    return period, attn_pos, mamba_pos, moe_pos
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_period(cfg: ModelConfig, key) -> Params:
+    period, attn_pos, mamba_pos, moe_pos = _pattern(cfg)
+    keys = jax.random.split(key, 2 * period + 2)
+    p: Params = {"mixers": {}, "ffns": {}, "norms1": {}, "norms2": {}}
+    for j in range(period):
+        kmix, kffn = keys[2 * j], keys[2 * j + 1]
+        p["norms1"][f"l{j}"] = init_norm(cfg, cfg.d_model)
+        p["norms2"][f"l{j}"] = init_norm(cfg, cfg.d_model)
+        if j in attn_pos:
+            p["mixers"][f"l{j}"] = attn_mod.init_attention(cfg, kmix)
+        else:
+            p["mixers"][f"l{j}"] = mamba_mod.init_mamba(cfg, kmix)
+        if j in moe_pos:
+            p["ffns"][f"l{j}"] = moe_mod.init_moe(cfg, kffn)
+        else:
+            p["ffns"][f"l{j}"] = mlp_mod.init_mlp(cfg, kffn)
+    return p
+
+
+def init_hybrid(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, ["embed", "layers", "head"])
+    pk = jax.random.split(ks["layers"], n_periods(cfg))
+    periods = jax.vmap(lambda k: _init_period(cfg, k))(pk)
+    params = {
+        "embed": embed_init(ks["embed"], (cfg.vocab_size, cfg.d_model), cfg.jdtype),
+        "periods": periods,
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks["head"], (cfg.d_model, cfg.vocab_size), cfg.jdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _period_fwd(cfg: ModelConfig, pp: Params, x: Array, use_flash: bool):
+    from repro.dist.constraints import constrain_act
+
+    x = constrain_act(cfg, x)
+    period, attn_pos, _, moe_pos = _pattern(cfg)
+    aux = jnp.float32(0.0)
+    for j in range(period):
+        xn = apply_norm(cfg, pp["norms1"][f"l{j}"], x)
+        if j in attn_pos:
+            h = attn_mod.attention(cfg, pp["mixers"][f"l{j}"], xn, use_flash=use_flash)
+        else:
+            h, _ = mamba_mod.mamba_forward(cfg, pp["mixers"][f"l{j}"], xn)
+        x = x + h
+        xn = apply_norm(cfg, pp["norms2"][f"l{j}"], x)
+        if j in moe_pos:
+            h, a = moe_mod.apply_moe(cfg, pp["ffns"][f"l{j}"], xn)
+            aux = aux + a
+        else:
+            h = mlp_mod.apply_mlp(cfg, pp["ffns"][f"l{j}"], xn)
+        x = x + h
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: Array, *, use_flash: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    period = lambda pp, x: _period_fwd(cfg, pp, x, use_flash)
+    if cfg.remat:
+        period = jax.checkpoint(period)
+
+    def body(carry, pp):
+        x, aux = carry
+        x, a = period(pp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["periods"], unroll=n_periods(cfg) if cfg.scan_unroll else 1)
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict, *, use_flash: bool = False):
+    logits, aux = forward(cfg, params, batch["tokens"], use_flash=use_flash)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = softmax_cross_entropy(logits, jnp.maximum(labels, 0))
+    if "ce_weight" in batch:
+        seq_loss = jnp.sum(ce * mask, axis=-1) / jnp.maximum(jnp.sum(mask, -1), 1.0)
+        loss = jnp.sum(batch["ce_weight"].astype(jnp.float32) * seq_loss)
+    else:
+        loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + cfg.router_aux_coef * aux, {"ce": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Per period: one attention KV cache + 7 mamba states, stacked over
+    periods."""
+    period, attn_pos, mamba_pos, _ = _pattern(cfg)
+    NP = n_periods(cfg)
+    kv = attn_mod.init_kv_cache(cfg, batch, max_len, layers_shape=(NP,))
+    ms = mamba_mod.init_mamba_state(cfg, batch)
+    mamba = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None, None], (NP, len(mamba_pos), *x.shape)), ms
+    )
+    return {"kv": kv, "mamba": mamba}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, token: Array, pos: Array):
+    period, attn_pos, mamba_pos, moe_pos = _pattern(cfg)
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def body(x, xs):
+        pp, pc = xs
+        new_mamba = []
+        for j in range(period):
+            xn = apply_norm(cfg, pp["norms1"][f"l{j}"], x)
+            if j in attn_pos:
+                h, kv = attn_mod.decode_attention(cfg, pp["mixers"][f"l{j}"], xn, pc["kv"], pos)
+                pc = {**pc, "kv": kv}
+            else:
+                mi = mamba_pos.index(j)
+                st = jax.tree.map(lambda s: s[mi], pc["mamba"])
+                h, st = mamba_mod.mamba_step(cfg, pp["mixers"][f"l{j}"], xn, st)
+                new_mamba.append(st)
+            x = x + h
+            xn = apply_norm(cfg, pp["norms2"][f"l{j}"], x)
+            if j in moe_pos:
+                h, _ = moe_mod.apply_moe(cfg, pp["ffns"][f"l{j}"], xn)
+            else:
+                h = mlp_mod.apply_mlp(cfg, pp["ffns"][f"l{j}"], xn)
+            x = x + h
+        mamba_stacked = jax.tree.map(lambda *s: jnp.stack(s), *new_mamba)
+        return x, {"kv": pc["kv"], "mamba": mamba_stacked}
+
+    x, new_cache = jax.lax.scan(body, x, (params["periods"], cache), unroll=n_periods(cfg) if cfg.scan_unroll else 1)
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head)[:, 0], new_cache

@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama-family), GELU (enc-dec), ReLU^2 (rwkv)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Params, dense_init, split_keys
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.mlp == "swiglu":
+        ks = split_keys(key, ["wg", "wu", "wd"])
+        return {
+            "wg": dense_init(ks["wg"], (d, f), cfg.jdtype),
+            "wu": dense_init(ks["wu"], (d, f), cfg.jdtype),
+            "wd": dense_init(ks["wd"], (f, d), cfg.jdtype),
+        }
+    ks = split_keys(key, ["wu", "wd"])
+    return {
+        "wu": dense_init(ks["wu"], (d, f), cfg.jdtype),
+        "wd": dense_init(ks["wd"], (f, d), cfg.jdtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu(x @ params["wg"])
+        return (g * (x @ params["wu"])) @ params["wd"]
+    h = x @ params["wu"]
+    if cfg.mlp == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.mlp == "relu_sq":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown mlp {cfg.mlp}")
+    return h @ params["wd"]

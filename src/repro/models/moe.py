@@ -1,0 +1,108 @@
+"""Mixture-of-Experts layer with capacity-based static dispatch.
+
+TPU-native formulation: instead of per-token dynamic routing (GPU-style
+gather of expert blocks), tokens are scattered into a static
+``(n_experts, capacity, d)`` buffer — slots computed from a cumulative
+count per expert, overflow tokens dropped (standard capacity-factor
+semantics) — so every expert matmul is a fixed-shape
+``(E, C, d) x (E, d, f)`` einsum that maps straight onto the MXU and
+shards over the mesh ``model`` axis (expert parallelism) when E divides
+the axis, or over ``f`` (tensor parallelism inside experts) otherwise.
+
+The router aux (load-balance) loss follows Switch/DBRX convention:
+``aux = E * sum_e f_e * P_e``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Params, dense_init, split_keys
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.ffe
+    ks = split_keys(key, ["router", "wg", "wu", "wd"])
+    return {
+        "router": dense_init(ks["router"], (d, E), cfg.jdtype),
+        "wg": dense_init(ks["wg"], (E, d, f), cfg.jdtype),
+        "wu": dense_init(ks["wu"], (E, d, f), cfg.jdtype),
+        "wd": dense_init(ks["wd"], (E, f, d), cfg.jdtype),
+    }
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(128, -(-c // 128) * 128)  # 128-aligned (lanes + shardable)
+
+
+def apply_moe(cfg: ModelConfig, params: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B, T, d) -> (y (B, T, d), aux_loss scalar)."""
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * T
+    C = capacity(N, cfg)
+
+    def _tok(t):
+        # keep flattened (N, ...) token tensors sharded after the (B, T)
+        # merge (the reshape otherwise drops the act_spec batch sharding)
+        if cfg.act_spec is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+
+        ax = cfg.act_spec[0] or cfg.act_spec[1]
+        if ax is None:
+            return t
+        return jax.lax.with_sharding_constraint(t, P(ax, *([None] * (t.ndim - 1))))
+
+    xt = _tok(x.reshape(N, d))
+
+    logits = (xt @ params["router"]).astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)  # (N, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- slot computation: position of each assignment within its expert --
+    flat_expert = expert.reshape(-1)  # (N*K,) in route-priority order
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (N*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # count of earlier same-expert
+    pos = jnp.take_along_axis(pos, flat_expert[:, None], axis=1)[:, 0]  # (N*K,)
+    keep = pos < C
+    slot = jnp.where(keep, flat_expert * C + pos, E * C)  # E*C == dropped
+
+    token_idx = jnp.repeat(jnp.arange(N), K)
+
+    # ---- dispatch ---------------------------------------------------------
+    def _constrain(b):
+        if cfg.moe_buf_spec is None:
+            return b
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(b, P(*cfg.moe_buf_spec))
+
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[slot].add(xt[token_idx], mode="drop")
+    buf = _constrain(buf.reshape(E, C, d))
+
+    # ---- expert computation (static shapes, MXU-aligned) ------------------
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"]))
+    h = g * jnp.einsum("ecd,edf->ecf", buf, params["wu"])
+    out = _constrain(jnp.einsum("ecf,efd->ecd", h, params["wd"]))
+    out = out.reshape(E * C, d)
+
+    # ---- combine ----------------------------------------------------------
+    contrib = _tok(out[jnp.minimum(slot, E * C - 1)])
+    contrib = jnp.where(keep[:, None], contrib, 0.0)
+    contrib = contrib * gate.reshape(-1)[:, None].astype(x.dtype)
+    y = _tok(jnp.zeros((N, d), x.dtype).at[token_idx].add(contrib))
+
+    # ---- load-balance aux loss -------------------------------------------
+    frac = jnp.mean(
+        jax.nn.one_hot(expert, E, dtype=jnp.float32).sum(1), axis=0
+    ) / K  # f_e: fraction of routed assignments per expert
+    pmean = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * pmean)
+    return y.reshape(B, T, d), aux.astype(jnp.float32)

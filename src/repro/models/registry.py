@@ -1,0 +1,84 @@
+"""Uniform model interface over every architecture family in the zoo.
+
+``build(cfg)`` returns a :class:`ModelBundle` exposing:
+  * ``init(key) -> params``
+  * ``loss_fn(params, batch) -> (loss, metrics)``      (training objective)
+  * ``init_cache(batch, max_len) -> cache``            (decode state)
+  * ``decode_step(params, cache, token, pos)``         (one-token serve)
+
+``batch`` is a dict with ``tokens``/``labels`` (LMs), plus ``prefix``
+(frontend embeddings) for vlm/audio/encdec, or ``images``/``labels`` for
+the CNN.  All functions are pure and jit/pjit-compatible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+from .common import ModelConfig
+from . import cnn as cnn_mod
+from . import encdec as encdec_mod
+from . import hybrid as hybrid_mod
+from . import transformer as tr_mod
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: Any
+    init: Callable
+    loss_fn: Callable  # (params, batch, *, use_flash=False) -> (loss, metrics)
+    forward: Optional[Callable] = None  # (params, batch) -> logits  (prefill)
+    init_cache: Optional[Callable] = None  # (batch, max_len) -> cache
+    decode_step: Optional[Callable] = None  # (params, cache, token, pos)
+    has_decode: bool = True
+
+
+def build(cfg) -> ModelBundle:
+    if isinstance(cfg, cnn_mod.CNNConfig):
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(cnn_mod.init_cnn, cfg),
+            loss_fn=lambda params, batch, **kw: cnn_mod.loss_fn(cfg, params, batch),
+            has_decode=False,
+        )
+    assert isinstance(cfg, ModelConfig), cfg
+    if cfg.arch_type == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(hybrid_mod.init_hybrid, cfg),
+            loss_fn=partial(hybrid_mod.loss_fn, cfg),
+            forward=lambda params, batch, **kw: hybrid_mod.forward(
+                cfg, params, batch["tokens"], **kw
+            )[0],
+            init_cache=partial(hybrid_mod.init_cache, cfg),
+            decode_step=partial(hybrid_mod.decode_step, cfg),
+        )
+    if cfg.arch_type == "encdec" or cfg.arch_type == "audio":
+
+        def _encdec_forward(params, batch, **kw):
+            memory = encdec_mod.encode(cfg, params, batch["prefix"], **kw)
+            return encdec_mod.decode_train(cfg, params, batch["tokens"], memory, **kw)
+
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(encdec_mod.init_encdec, cfg),
+            loss_fn=partial(encdec_mod.loss_fn, cfg),
+            forward=_encdec_forward,
+            init_cache=partial(encdec_mod.init_cache, cfg),
+            decode_step=partial(encdec_mod.decode_step, cfg),
+        )
+    # dense / moe / ssm / vlm all route through the generic LM
+    return ModelBundle(
+        cfg=cfg,
+        init=partial(tr_mod.init_lm, cfg),
+        loss_fn=partial(tr_mod.loss_fn, cfg),
+        forward=lambda params, batch, **kw: tr_mod.forward(
+            cfg, params, batch["tokens"], prefix_embeds=batch.get("prefix"), **kw
+        )[0],
+        init_cache=partial(tr_mod.init_cache, cfg),
+        decode_step=partial(tr_mod.decode_step, cfg),
+    )

@@ -1,0 +1,241 @@
+"""Decoder-only language model assembly (dense / MoE / RWKV / VLM-backbone).
+
+Layers are stored stacked along a leading axis and executed with
+``jax.lax.scan`` so HLO size and compile time are O(1) in depth.  Per-layer
+heterogeneity that varies *numerically* (gemma3's 5 local : 1 global
+sliding-window pattern) is threaded through the scan as a traced per-layer
+window array — global layers simply get a window larger than any sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from .common import (
+    ModelConfig,
+    Params,
+    apply_norm,
+    embed_init,
+    dense_init,
+    init_norm,
+    softmax_cross_entropy,
+    split_keys,
+)
+
+Array = jax.Array
+
+GLOBAL_WINDOW = 1 << 30  # "window" given to non-sliding layers
+
+
+def window_array(cfg: ModelConfig) -> Array:
+    """Per-layer attention window (traced into the layer scan)."""
+    if cfg.sliding_window is None:
+        return jnp.full((cfg.n_layers,), GLOBAL_WINDOW, jnp.int32)
+    if not cfg.local_global_ratio:
+        return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    l = jnp.arange(cfg.n_layers)
+    period = cfg.local_global_ratio + 1
+    is_global = (l % period) == cfg.local_global_ratio
+    return jnp.where(is_global, GLOBAL_WINDOW, cfg.sliding_window).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, ["attn", "ffn", "n1", "n2"])
+    if cfg.arch_type == "ssm":  # rwkv6
+        return {
+            "ln1": init_norm(cfg, cfg.d_model),
+            "tm": rwkv_mod.init_rwkv_time_mix(cfg, ks["attn"]),
+            "ln2": init_norm(cfg, cfg.d_model),
+            "cm": rwkv_mod.init_rwkv_channel_mix(cfg, ks["ffn"]),
+        }
+    ffn = (
+        moe_mod.init_moe(cfg, ks["ffn"])
+        if cfg.n_experts > 0
+        else mlp_mod.init_mlp(cfg, ks["ffn"])
+    )
+    return {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "attn": attn_mod.init_attention(cfg, ks["attn"]),
+        "ln2": init_norm(cfg, cfg.d_model),
+        "ffn": ffn,
+    }
+
+
+def init_lm(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, ["embed", "layers", "head", "proj"])
+    layer_keys = jax.random.split(ks["layers"], cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_block(cfg, k))(layer_keys)
+    params = {
+        "embed": embed_init(ks["embed"], (cfg.vocab_size, cfg.d_model), cfg.jdtype),
+        "layers": layers,
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks["head"], (cfg.d_model, cfg.vocab_size), cfg.jdtype)
+    if cfg.arch_type == "vlm" or cfg.frontend_tokens:
+        params["proj"] = dense_init(ks["proj"], (cfg.d_model, cfg.d_model), cfg.jdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (teacher-forced / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg, lp, x, window, use_flash, static_window=None):
+    from repro.dist.constraints import constrain_act
+
+    x = constrain_act(cfg, x)
+    if cfg.arch_type == "ssm":
+        h, _ = rwkv_mod.time_mix(cfg, lp["tm"], apply_norm(cfg, lp["ln1"], x))
+        x = x + h
+        h, _ = rwkv_mod.channel_mix(cfg, lp["cm"], apply_norm(cfg, lp["ln2"], x))
+        return x + h, jnp.float32(0.0)
+    h = attn_mod.attention(
+        cfg, lp["attn"], apply_norm(cfg, lp["ln1"], x), window=window,
+        static_window=static_window, use_flash=use_flash,
+    )
+    x = x + h
+    hn = apply_norm(cfg, lp["ln2"], x)
+    if cfg.n_experts > 0:
+        h, aux = moe_mod.apply_moe(cfg, lp["ffn"], hn)
+    else:
+        h, aux = mlp_mod.apply_mlp(cfg, lp["ffn"], hn), jnp.float32(0.0)
+    return x + h, aux
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Array,
+    *,
+    prefix_embeds: Optional[Array] = None,
+    use_flash: bool = False,
+) -> Tuple[Array, Array]:
+    """tokens (B, T) -> (logits (B, T_total, V), moe_aux scalar)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        pref = prefix_embeds.astype(x.dtype) @ params["proj"]
+        x = jnp.concatenate([pref, x], axis=1)
+    wins = window_array(cfg)
+
+    if cfg.static_window_pattern and cfg.sliding_window is not None:
+        # §Perf: unrolled stack with per-layer static windows — local layers
+        # use the banded O(T*window) path, global layers the dense path.
+        period = (cfg.local_global_ratio or 0) + 1
+        aux = jnp.float32(0.0)
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            is_global = cfg.local_global_ratio and (
+                l % period == cfg.local_global_ratio
+            )
+            sw = None if is_global else cfg.sliding_window
+            blk = lambda lp, x: _block(cfg, lp, x, wins[l], use_flash, static_window=sw)
+            if cfg.remat:
+                blk = jax.checkpoint(blk)
+            x, a = blk(lp, x)
+            aux = aux + a
+    else:
+        block = lambda lp, x, win: _block(cfg, lp, x, win, use_flash)
+        if cfg.remat:
+            block = jax.checkpoint(block)
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, win = xs
+            x, a = block(lp, x, win)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), (params["layers"], wins), unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict, *, use_flash: bool = False):
+    """batch: tokens (B,T) int32, labels (B,T) int32 (-1 = masked),
+    optional 'prefix' (B, P, d) frontend embeddings (vlm/audio)."""
+    logits, aux = forward(
+        cfg, params, batch["tokens"], prefix_embeds=batch.get("prefix"), use_flash=use_flash
+    )
+    labels = batch["labels"]
+    T = labels.shape[1]
+    logits = logits[:, -T:]  # drop prefix positions
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = softmax_cross_entropy(logits, jnp.maximum(labels, 0))
+    if "ce_weight" in batch:
+        # per-sequence weights (the flat ColRel round: w_{client(seq)}/B)
+        seq_loss = jnp.sum(ce * mask, axis=-1) / jnp.maximum(jnp.sum(mask, -1), 1.0)
+        loss = jnp.sum(batch["ce_weight"].astype(jnp.float32) * seq_loss)
+    else:
+        loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve step against a preallocated KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    if cfg.arch_type == "ssm":
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)),
+            rwkv_mod.init_rwkv_state(cfg, batch),
+        )
+    return attn_mod.init_kv_cache(cfg, batch, max_len, layers_shape=(cfg.n_layers,))
+
+
+def decode_step(
+    cfg: ModelConfig, params: Params, cache: Params, token: Array, pos: Array
+) -> Tuple[Array, Params]:
+    """token (B, 1) int32; pos scalar int32 — position being generated.
+    Returns (logits (B, V), new cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    wins = window_array(cfg)
+
+    if cfg.arch_type == "ssm":
+
+        def body(x, xs):
+            lp, st = xs
+            h, tm_state = rwkv_mod.time_mix(cfg, lp["tm"], apply_norm(cfg, lp["ln1"], x), state=st["tm"])
+            x = x + h
+            h, cm_state = rwkv_mod.channel_mix(cfg, lp["cm"], apply_norm(cfg, lp["ln2"], x), state=st["cm"])
+            return x + h, {"tm": tm_state, "cm": cm_state}
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    else:
+
+        def body(x, xs):
+            lp, c, win = xs
+            h, c = attn_mod.decode_attention(
+                cfg, lp["attn"], apply_norm(cfg, lp["ln1"], x), c, pos, window=win
+            )
+            x = x + h
+            hn = apply_norm(cfg, lp["ln2"], x)
+            if cfg.n_experts > 0:
+                h, _ = moe_mod.apply_moe(cfg, lp["ffn"], hn)
+            else:
+                h = mlp_mod.apply_mlp(cfg, lp["ffn"], hn)
+            return x + h, c
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, wins), unroll=cfg.n_layers if cfg.scan_unroll else 1)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,16 @@
+from .sgd import sgd, sgd_momentum
+from .adam import adamw
+from .schedule import constant, cosine_decay, inverse_round_decay, warmup_cosine
+from .base import Optimizer, apply_updates
+
+__all__ = [
+    "Optimizer",
+    "apply_updates",
+    "sgd",
+    "sgd_momentum",
+    "adamw",
+    "constant",
+    "cosine_decay",
+    "inverse_round_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,44 @@
+"""AdamW for the transformer training examples."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, tree_zeros_like
+from .sgd import Schedule, _lr
+
+
+def adamw(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": tree_zeros_like(params),
+            "v": tree_zeros_like(params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = _lr(lr, step)
+        m = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32), grads, state["m"])
+        v = jax.tree.map(
+            lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), grads, state["v"]
+        )
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return -eta * upd
+
+        return jax.tree.map(u, m, v, params), {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,37 @@
+"""Minimal optimizer substrate (no optax in this container): an optimizer
+is an (init, update) pair over pytrees, optax-style.
+
+``update(grads, state, params) -> (updates, state)`` returns *additive*
+updates; ``apply_updates`` adds them.  All states are pytrees so they
+shard with the params under pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params], tuple[Params, Any]]
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def tree_zeros_like(params: Params, dtype=jnp.float32) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )

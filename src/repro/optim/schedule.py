@@ -1,0 +1,34 @@
+"""Learning-rate schedules, including the paper/Theorem-1 inverse decay
+``eta_r = (4/mu) / (r*T + 1)`` used by the strongly-convex validation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def inverse_round_decay(c: float, period: int, offset: float = 1.0):
+    """eta_r = c / (r * period + offset)  — Theorem 1's schedule."""
+    return lambda step: jnp.float32(c) / (step.astype(jnp.float32) * period + offset)
+
+
+def cosine_decay(lr: float, steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32) / steps, 1.0)
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, steps: int, final_frac: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        t = jnp.clip((s - warmup) / jnp.maximum(steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * jnp.where(s < warmup, warm, cos)
+
+    return f

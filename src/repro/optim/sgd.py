@@ -1,0 +1,62 @@
+"""SGD and SGD-with-momentum (the paper's client and server optimizers).
+
+The paper uses plain SGD at the clients (lr 0.05, l2 1e-4) and momentum
+(beta = 0.9) applied at the PS on the aggregated round delta.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, tree_zeros_like
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr(schedule: Schedule, step):
+    return schedule(step) if callable(schedule) else jnp.float32(schedule)
+
+
+def sgd(lr: Schedule, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        eta = _lr(lr, state["step"])
+
+        def u(g, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            return -eta * g
+
+        return jax.tree.map(u, grads, params), {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr: Schedule, beta: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "m": tree_zeros_like(params)}
+
+    def update(grads, state, params):
+        eta = _lr(lr, state["step"])
+
+        def mom(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            return beta * m + g
+
+        m = jax.tree.map(mom, grads, state["m"], params)
+        if nesterov:
+            upd = jax.tree.map(lambda g, m: -eta * (g.astype(jnp.float32) + beta * m), grads, m)
+        else:
+            upd = jax.tree.map(lambda m: -eta * m, m)
+        return upd, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)

@@ -1,0 +1,96 @@
+"""Connectivity model: validation, sampling laws, reciprocity coupling."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LinkModel,
+    effective_weights,
+    reciprocity_matrix,
+    sample_round,
+)
+from repro.core import topology
+
+
+def test_linkmodel_validation():
+    p = np.array([0.5, 0.5])
+    P = np.array([[1.0, 0.3], [0.4, 1.0]])
+    LinkModel(p, P, reciprocity_matrix(P, 0.0))
+    with pytest.raises(ValueError):
+        LinkModel(p, P * 2, reciprocity_matrix(P, 0.0))  # probs > 1
+    with pytest.raises(ValueError):
+        LinkModel(p, P - np.eye(2) * 0.5, reciprocity_matrix(P, 0.0))  # diag != 1
+    with pytest.raises(ValueError):
+        # E below independence violates the paper's assumption
+        E = P * P.T - 0.05
+        np.fill_diagonal(E, 1.0)
+        LinkModel(p, P, E)
+
+
+def test_reciprocity_matrix_bounds():
+    P = np.array([[1.0, 0.6], [0.8, 1.0]])
+    for rho in (0.0, 0.3, 1.0):
+        E = reciprocity_matrix(P, rho)
+        assert np.all(E >= P * P.T - 1e-12)
+        assert np.all(E <= np.minimum(P, P.T) + 1e-12)
+    assert np.allclose(reciprocity_matrix(P, 0.0), np.where(np.eye(2), 1, P * P.T))
+
+
+@pytest.mark.parametrize("rho", [0.0, 1.0])
+def test_sampling_marginals_and_correlation(rho, rng):
+    m = topology.fully_connected(4, 0.7, p_c=0.5, rho=rho)
+    R = 6000
+    ups = np.zeros(4)
+    dd11 = 0.0
+    dds = np.zeros((4, 4))
+    for _ in range(R):
+        tu, td = sample_round(m, rng)
+        ups += tu
+        dds += td
+        dd11 += td[0, 1] * td[1, 0]
+    assert np.allclose(ups / R, 0.7, atol=0.03)
+    off = ~np.eye(4, dtype=bool)
+    assert np.allclose((dds / R)[off], 0.5, atol=0.03)
+    expected_joint = m.E[0, 1]
+    assert abs(dd11 / R - expected_joint) < 0.03
+
+
+def test_full_reciprocity_is_symmetric(rng):
+    m = topology.fully_connected(5, 0.5, p_c=0.6, rho=1.0)
+    for _ in range(50):
+        _, td = sample_round(m, rng)
+        assert np.array_equal(td, td.T)  # tau_ij = 0 <=> tau_ji = 0
+
+
+def test_effective_weights_identity(rng):
+    m = topology.paper_fig2b()
+    A = rng.random((10, 10))
+    tu, td = sample_round(m, rng)
+    w = effective_weights(A, tu, td)
+    # brute-force the double sum
+    want = np.zeros(10)
+    for j in range(10):
+        want[j] = sum(tu[i] * td[j, i] * A[i, j] for i in range(10))
+    assert np.allclose(w, want)
+
+
+def test_mmwave_prob():
+    assert topology.mmwave_prob(np.array([0.0])) == 1.0
+    d99 = 30 * (5.2 - np.log(0.99))
+    assert abs(topology.mmwave_prob(np.array([d99]))[0] - 0.99) < 1e-9
+
+
+def test_topologies_shapes():
+    for m in [
+        topology.no_collaboration(6, 0.3),
+        topology.ring(6, 0.3, 0.9),
+        topology.star_relay(6, 0.3, hub=2),
+        topology.clustered(6, 0.3, cluster_size=3),
+        topology.erdos_renyi(6, 0.3, 0.5, structural=True),
+        topology.paper_fig2a(),
+        topology.paper_fig2b(),
+        topology.paper_mmwave_layout(d2d_mode="intermittent"),
+        topology.paper_mmwave_layout(d2d_mode="permanent"),
+    ]:
+        assert m.P.shape == (m.n, m.n)
+        assert np.allclose(np.diag(m.P), 1.0)

@@ -1,0 +1,130 @@
+"""FL round semantics on a strongly-convex quadratic: mode equivalences and
+the paper's convergence ordering (ColRel ~ perfect >> blind)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Aggregation, fedavg_weights, optimize_weights, topology
+from repro.data import quadratic_problem
+from repro.data.pipeline import ClientDataset
+from repro.fl import FLTrainer
+from repro.optim import sgd, sgd_momentum
+
+PROB = quadratic_problem(10, 16, mu=1.0, L=8.0, hetero=1.0, seed=0)
+H = jnp.asarray(PROB["H"], jnp.float32)
+XSTAR = jnp.asarray(PROB["x_star"], jnp.float32)
+MODEL = topology.paper_fig2a()
+RES = optimize_weights(MODEL, sweeps=20, fine_tune_sweeps=20)
+
+
+def loss_fn(params, batch):
+    x = params["x"]
+    d = x - batch["center"][0]
+    return 0.5 * d @ (H @ d) + 0.1 * batch["noise"][0] @ x, {}
+
+
+def make_clients(seed):
+    cs = []
+    for i in range(10):
+        c = PROB["centers"][i].astype(np.float32)
+        pool = np.random.default_rng(100 + i).normal(size=(2048, 16)).astype(np.float32)
+        cs.append(ClientDataset({"center": np.tile(c, (2048, 1)), "noise": pool},
+                                batch_size=1, seed=seed + i))
+    return cs
+
+
+def run(agg, A, mode="per_client", rounds=40, local_steps=4, seed=0):
+    t = FLTrainer(loss_fn, {"x": jnp.zeros(16)}, MODEL, A, make_clients(7),
+                  sgd(0.02), sgd_momentum(1.0, beta=0.0), local_steps=local_steps,
+                  aggregation=agg, mode=mode, seed=seed)
+    t.run(rounds)
+    return float(jnp.sum((t.params["x"] - XSTAR) ** 2))
+
+
+def test_fused_equals_faithful():
+    a = run(Aggregation.COLREL, RES.A)
+    b = run(Aggregation.COLREL_FUSED, RES.A)
+    assert abs(a - b) < 1e-5
+
+
+def test_sequential_equals_per_client():
+    a = run(Aggregation.COLREL_FUSED, RES.A)
+    b = run(Aggregation.COLREL_FUSED, RES.A, mode="client_sequential")
+    assert abs(a - b) < 1e-4
+
+
+def test_weighted_grad_equals_per_client_at_T1():
+    a = run(Aggregation.COLREL_FUSED, RES.A, local_steps=1)
+    b = run(Aggregation.COLREL_FUSED, RES.A, mode="weighted_grad", local_steps=1)
+    assert abs(a - b) < 1e-4
+
+
+def test_paper_ordering():
+    colrel = run(Aggregation.COLREL, RES.A)
+    blind = run(Aggregation.FEDAVG_BLIND, fedavg_weights(10))
+    perfect = run(Aggregation.FEDAVG_PERFECT, fedavg_weights(10))
+    # Fig. 2 ordering: blind >> colrel, colrel within noise of perfect.
+    assert colrel < 0.1 * blind, (colrel, blind)
+    assert colrel < blind and perfect < blind
+
+
+def test_optimized_weights_reduce_round_variance():
+    """COPT-alpha's S reduction shows up as lower realized variance of the
+    aggregated round delta (the quantity Theorem 1 bounds)."""
+    from repro.core import initial_weights, sample_round, effective_weights
+
+    rng = np.random.default_rng(3)
+    A_opt, A_init = RES.A, initial_weights(MODEL)
+    var_opt = var_init = 0.0
+    R = 8000
+    for _ in range(R):
+        tu, td = sample_round(MODEL, rng)
+        w_o = effective_weights(A_opt, tu, td)
+        w_i = effective_weights(A_init, tu, td)
+        var_opt += ((w_o - 1).sum() / 10) ** 2
+        var_init += ((w_i - 1).sum() / 10) ** 2
+    assert var_opt < 0.5 * var_init, (var_opt / R, var_init / R)
+
+
+def test_weighted_flat_equals_weighted_grad():
+    """The flat ColRel round (per-sequence loss weights) produces the same
+    global update as the per-client-vmap weighted_grad round."""
+    import jax
+    from repro.configs.base import get_arch
+    from repro.core import sample_round
+    from repro.fl.round import RoundConfig, make_round_fn
+    from repro.models import build
+    from repro.optim import sgd, sgd_momentum
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    n, B, S = 4, 2, 32
+    m = topology.fully_connected(n, 0.6, p_c=0.8)
+    rng = np.random.default_rng(0)
+    tu, td = sample_round(m, rng)
+    toks = rng.integers(0, cfg.vocab_size, size=(n, B, S + 1), dtype=np.int32)
+    A = jnp.asarray(np.eye(n) * 2.0, jnp.float32)
+
+    server = sgd_momentum(1.0, beta=0.0)
+    out = {}
+    for mode in ("weighted_grad", "weighted_flat"):
+        rc = RoundConfig(n_clients=n, local_steps=1, mode=mode,
+                         aggregation=Aggregation.COLREL_FUSED)
+        fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.1), server, rc))
+        if mode == "weighted_grad":
+            batches = {"tokens": jnp.asarray(toks[..., :-1]),
+                       "labels": jnp.asarray(toks[..., 1:])}
+        else:
+            batches = {"tokens": jnp.asarray(toks[..., :-1]).reshape(n * B, S),
+                       "labels": jnp.asarray(toks[..., 1:]).reshape(n * B, S)}
+        p2, _, _ = fn(params, server.init(params),
+                      batches, jnp.asarray(tu, jnp.float32),
+                      jnp.asarray(td, jnp.float32), A)
+        out[mode] = p2
+    for a, b in zip(jax.tree.leaves(out["weighted_grad"]),
+                    jax.tree.leaves(out["weighted_flat"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-5, rtol=2e-4)

@@ -1,0 +1,116 @@
+"""Pallas kernels vs their pure-jnp oracles: shape/dtype sweeps in
+interpret mode (kernel bodies execute step-by-step on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.relay_mix import relay_mix_pallas
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n", [4, 10, 16, 33])
+@pytest.mark.parametrize("d", [128, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_relay_mix_sweep(n, d, dtype):
+    M = jnp.asarray(RNG.normal(size=(n, n)), jnp.float32)
+    X = jnp.asarray(RNG.normal(size=(n, d))).astype(dtype)
+    got = relay_mix_pallas(M, X, block_d=512, interpret=True)
+    want = ref.relay_mix_ref(M, X)
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_relay_mix_masked_semantics():
+    """Kernel applied to (A * tau^T) reproduces Eq. (3) with dropped links."""
+    n, d = 8, 256
+    A = jnp.asarray(RNG.random((n, n)), jnp.float32)
+    tau = jnp.asarray((RNG.random((n, n)) < 0.5).astype(np.float32))
+    X = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    M = A * tau.T
+    got = ops.relay_mix(M, X, block_d=128)
+    want = M @ X
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 128, 2, 64), (2, 256, 4, 32), (1, 192, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(shape, dtype):
+    B, T, H, D = shape
+    q = jnp.asarray(RNG.normal(size=(B * H, T, D))).astype(dtype)
+    k = jnp.asarray(RNG.normal(size=(B * H, T, D))).astype(dtype)
+    v = jnp.asarray(RNG.normal(size=(B * H, T, D))).astype(dtype)
+    got = flash_attention_pallas(q, k, v, block_q=64, block_kv=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_gqa_wrapper():
+    B, T, H, KV, D = 2, 128, 4, 2, 32
+    q = jnp.asarray(RNG.normal(size=(B, T, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, KV, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, KV, D)), jnp.float32)
+    got = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
+    G = H // KV
+    kr = jnp.repeat(k, G, 2).transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    vr = jnp.repeat(v, G, 2).transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    want = ref.flash_attention_ref(qr, kr, vr).reshape(B, H, T, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_flash_attention_in_model_attention():
+    """models/attention.py use_flash path == jnp path."""
+    from repro.models.attention import attention, init_attention
+    from repro.models.common import ModelConfig
+
+    cfg = ModelConfig(d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, vocab_size=64)
+    p = init_attention(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 64))
+    a = attention(cfg, p, x, use_flash=False)
+    b = attention(cfg, p, x, use_flash=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 8, 16), (1, 64, 4, 4), (3, 96, 16, 32)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_ssd_scan_sweep(shape, chunk):
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+
+    BH, T, Dk, Dv = shape
+    q = jnp.asarray(RNG.normal(size=(BH, T, Dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(BH, T, Dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(BH, T, Dv)), jnp.float32)
+    logd = jnp.asarray(-np.abs(RNG.normal(size=(BH, T))), jnp.float32)
+    got = ssd_scan_pallas(q, k, v, logd, chunk=chunk, interpret=True)
+    want = ref.ssd_scan_ref(q, k, v, logd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=5e-4)
+
+
+def test_ssd_scan_matches_jnp_chunked():
+    """Kernel == the jnp production path (models.ssm.ssd_chunked)."""
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+    from repro.models import ssm
+
+    B, T, H, Dk, Dv = 2, 64, 3, 8, 8
+    q = jnp.asarray(RNG.normal(size=(B, T, H, Dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, H, Dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, H, Dv)), jnp.float32)
+    loga = jnp.asarray(-np.abs(RNG.normal(size=(B, T, H))), jnp.float32)
+    y_jnp, _ = ssm.ssd_chunked(q, k, v, loga, chunk=16)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, Dk)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, Dk)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, Dv)
+    lf = loga.transpose(0, 2, 1).reshape(B * H, T)
+    y_k = ssd_scan_pallas(qf, kf, vf, lf, chunk=16, interpret=True)
+    y_k = y_k.reshape(B, H, T, Dv).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_jnp), atol=5e-4, rtol=5e-4)

@@ -1,0 +1,115 @@
+"""Optimizers, schedules, data pipeline, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data import (
+    partition_iid,
+    partition_sort_and_partition,
+    synthetic_cifar,
+    synthetic_tokens,
+)
+from repro.data.pipeline import ClientDataset, federated_batches, make_federated_clients
+
+
+def test_sgd_momentum_matches_manual():
+    opt = optim.sgd_momentum(0.1, beta=0.9)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -1.0])}
+    s = opt.init(p)
+    m = np.zeros(2)
+    x = np.array([1.0, 2.0])
+    for _ in range(3):
+        upd, s = opt.update(g, s, p)
+        p = optim.apply_updates(p, upd)
+        m = 0.9 * m + np.array([0.5, -1.0])
+        x = x - 0.1 * m
+    np.testing.assert_allclose(np.asarray(p["w"]), x, rtol=1e-6)
+
+
+def test_adamw_direction():
+    opt = optim.adamw(1e-2)
+    p = {"w": jnp.zeros(3)}
+    s = opt.init(p)
+    g = {"w": jnp.array([1.0, -1.0, 0.0])}
+    upd, s = opt.update(g, s, p)
+    assert upd["w"][0] < 0 and upd["w"][1] > 0 and abs(upd["w"][2]) < 1e-8
+
+
+def test_inverse_round_decay_matches_theorem():
+    mu, T = 2.0, 8
+    sched = optim.inverse_round_decay(4.0 / mu, T)
+    for r in [0, 1, 10]:
+        assert abs(float(sched(jnp.int32(r))) - (4 / mu) / (r * T + 1)) < 1e-7
+
+
+def test_partition_iid_covers_everything():
+    parts = partition_iid(103, 10, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 103
+    assert len(np.unique(allidx)) == 103
+
+
+def test_sort_and_partition_skew():
+    _, labels = synthetic_cifar(n=2000, seed=1)
+    for s in (1, 2, 3):
+        parts = partition_sort_and_partition(labels, 10, s=s, seed=0)
+        assert len(np.unique(np.concatenate(parts))) == 2000
+        # each shard can straddle one label boundary, so the hard cap is 2s;
+        # the typical client has ~s distinct labels
+        counts = [len(np.unique(labels[pt])) for pt in parts]
+        assert max(counts) <= 2 * s
+        assert np.mean(counts) <= s + 1.0
+
+
+def test_client_dataset_and_stacking():
+    imgs, labels = synthetic_cifar(n=200, seed=0)
+    parts = partition_iid(200, 4, seed=0)
+    clients = make_federated_clients({"images": imgs, "labels": labels}, parts, 8)
+    fb = federated_batches(clients)
+    assert fb["images"].shape == (4, 8, 32, 32, 3)
+    assert fb["labels"].shape == (4, 8)
+    # per-client rngs are independent and reproducible
+    c2 = make_federated_clients({"images": imgs, "labels": labels}, parts, 8)
+    fb2 = federated_batches(c2)
+    np.testing.assert_array_equal(fb["labels"], fb2["labels"])
+
+
+def test_synthetic_tokens_learnable_structure():
+    toks, styles = synthetic_tokens(16, 64, vocab=97, seed=0)
+    assert toks.shape == (16, 64) and toks.min() >= 0 and toks.max() < 97
+    assert styles.shape == (16,)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": [jnp.ones((2,), jnp.bfloat16), {"c": jnp.int32(3)}],
+        "scalar": 1.5,
+        "name": "x",
+    }
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    save_checkpoint(path, tree)
+    back = load_checkpoint(path)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert back["b"][0].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(back["b"][0], np.float32), np.ones(2, np.float32)
+    )
+    assert back["b"][1]["c"] == 3
+    assert back["scalar"] == 1.5 and back["name"] == "x"
+
+
+def test_quadratic_problem_conditioning():
+    from repro.data import quadratic_problem
+
+    prob = quadratic_problem(4, 8, mu=0.5, L=4.0, seed=0)
+    eig = np.linalg.eigvalsh(prob["H"])
+    assert eig.min() >= 0.5 - 1e-9 and eig.max() <= 4.0 + 1e-9
+    np.testing.assert_allclose(prob["x_star"], prob["centers"].mean(0))

@@ -1,0 +1,93 @@
+"""COPT-alpha (Algorithm 3): unbiasedness, variance reduction, edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    fedavg_weights,
+    importance_weights,
+    initial_weights,
+    is_unbiased,
+    optimize_weights,
+    unbiasedness_residual,
+    variance_S,
+    variance_Sbar,
+)
+from repro.core import topology
+from repro.core.connectivity import sample_round
+
+
+TOPOLOGIES = {
+    "fig2a": topology.paper_fig2a(),
+    "fig2b": topology.paper_fig2b(),
+    "mmwave_int": topology.paper_mmwave_layout(d2d_mode="intermittent"),
+    "mmwave_perm": topology.paper_mmwave_layout(d2d_mode="permanent"),
+    "ring": topology.ring(8, 0.4, 0.8),
+}
+
+
+@pytest.mark.parametrize("name", list(TOPOLOGIES))
+def test_copt_alpha(name):
+    m = TOPOLOGIES[name]
+    A0 = initial_weights(m)
+    assert is_unbiased(m, A0, atol=1e-8), "init must satisfy condition (5)"
+    res = optimize_weights(m, sweeps=25, fine_tune_sweeps=25)
+    assert is_unbiased(m, res.A, atol=1e-6)
+    assert np.all(res.A >= -1e-12), "Assumption 4: nonnegative weights"
+    assert res.S <= res.S_init + 1e-9, "optimizer must not increase S"
+    assert res.S <= variance_Sbar(m, res.A) + 1e-9, "Lemma 2: S <= Sbar"
+
+
+def test_monotone_history():
+    m = TOPOLOGIES["fig2b"]
+    res = optimize_weights(m, sweeps=15, fine_tune_sweeps=15)
+    relax = [v for tag, _, v in res.history if tag == "relax"]
+    assert all(b <= a + 1e-9 for a, b in zip(relax, relax[1:])), \
+        "Gauss-Seidel on the convex relaxation must be monotone"
+
+
+def test_no_collaboration_recovers_importance_weights():
+    # With P = I the only feasible unbiased weights are alpha_ii = 1/p_i.
+    m = topology.no_collaboration(6, [0.2, 0.4, 0.5, 0.8, 1.0, 0.3])
+    res = optimize_weights(m, sweeps=5, fine_tune_sweeps=5)
+    assert np.allclose(res.A, importance_weights(m), atol=1e-8)
+
+
+def test_perfect_connectivity_uniform():
+    # All links perfect: optimum splits weight equally (case 2 of Eq. (11)).
+    m = topology.fully_connected(5, 1.0, p_c=1.0, rho=1.0)
+    res = optimize_weights(m, sweeps=3, fine_tune_sweeps=3)
+    assert np.allclose(res.A, np.full((5, 5), 1 / 5), atol=1e-9)
+    assert res.S < 1e-12
+
+
+def test_fedavg_blind_weights_biased_under_dropouts():
+    m = topology.no_collaboration(4, 0.5)
+    resid = unbiasedness_residual(m, fedavg_weights(4))
+    assert np.all(resid < -1e-6), "blind FedAvg underweights dropped clients"
+
+
+def test_variance_matches_monte_carlo(rng):
+    """Appendix C: with identical unit updates, E[((1/n) sum_j (w_j - 1))^2]
+    equals S / n^2."""
+    m = topology.paper_fig2a()
+    res = optimize_weights(m, sweeps=20, fine_tune_sweeps=20)
+    n = m.n
+    R = 20000
+    acc = 0.0
+    from repro.core import effective_weights
+
+    for _ in range(R):
+        tu, td = sample_round(m, rng)
+        w = effective_weights(res.A, tu, td)
+        acc += ((w - 1.0).sum() / n) ** 2
+    mc = acc / R
+    analytic = variance_S(m, res.A) / n**2
+    assert abs(mc - analytic) / analytic < 0.1, (mc, analytic)
+
+
+def test_colrel_lower_variance_than_no_relaying():
+    m = topology.paper_fig2b()
+    res = optimize_weights(m, sweeps=25, fine_tune_sweeps=25)
+    s_imp = variance_S(m, importance_weights(m))
+    assert res.S < 0.5 * s_imp, "relaying should cut variance substantially"
