@@ -26,7 +26,7 @@ from .weights import (
     variance_Sbar,
 )
 from .aggregation import Aggregation, aggregate
-from . import relay, topology
+from . import flatten, relay, topology
 
 __all__ = [
     "LinkModel",
@@ -45,6 +45,7 @@ __all__ = [
     "OptResult",
     "Aggregation",
     "aggregate",
+    "flatten",
     "relay",
     "topology",
 ]

@@ -1,0 +1,98 @@
+"""Flatten-once plumbing between pytree model updates and the (n, d) stack.
+
+The ColRel hot path (relay mix + blind PS sum) is pure memory-bound
+streaming over the stacked client updates.  Executing it per-leaf costs
+one XLA op pair *per pytree leaf* (hundreds for the production archs) and
+re-reads the (n, d) stack from HBM leaf by leaf.  Instead, the round
+ravels the whole per-client update pytree into a single contiguous
+``(n_clients, d)`` buffer **once per round**, streams that buffer through
+the fused aggregation kernel exactly once, and unravels the resulting
+``(d,)`` PS delta back to the model pytree.
+
+The ravel is layout-only work (reshape + one concatenate into the
+contiguous buffer); the unravel is ``d`` slices.  Both are O(n*d) bytes —
+the same traffic a single leaf-wise pass would pay — and everything in
+between touches the stack once.
+
+``FlatSpec`` is hashable static metadata (leaf shapes + treedef), so the
+same spec can key jit caches and be rebuilt for free under tracing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+__all__ = ["FlatSpec", "flat_spec", "ravel", "ravel_stacked", "unravel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static layout of a flattened pytree: where each leaf lives in (d,)."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(int(np.prod(s, dtype=np.int64)) for s in self.shapes)
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        return tuple(int(o) for o in np.cumsum((0,) + self.sizes[:-1]))
+
+    @property
+    def d(self) -> int:
+        return sum(self.sizes)
+
+
+def flat_spec(tree: Params, *, stacked: bool = False) -> FlatSpec:
+    """Layout spec for ``tree``.  With ``stacked=True`` the leaves carry a
+    leading client axis ``(n, *shape)`` that is excluded from the layout."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(
+        tuple(leaf.shape[1:] if stacked else leaf.shape) for leaf in leaves
+    )
+    return FlatSpec(treedef, shapes)
+
+
+def ravel(tree: Params, *, dtype=None) -> jax.Array:
+    """Pytree -> contiguous (d,) buffer (leaf order = jax.tree.flatten)."""
+    leaves = jax.tree.leaves(tree)
+    parts = [leaf.reshape(-1) for leaf in leaves]
+    if dtype is not None:
+        parts = [p.astype(dtype) for p in parts]
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def ravel_stacked(tree: Params, *, dtype=None) -> jax.Array:
+    """Stacked pytree (leaves ``(n, *shape)``) -> contiguous ``(n, d)``.
+
+    This is the flatten-*once* step of the fused aggregation engine: the
+    only materialization of the round's update stack.
+    """
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    parts = [leaf.reshape(n, -1) for leaf in leaves]
+    if dtype is not None:
+        parts = [p.astype(dtype) for p in parts]
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def unravel(spec: FlatSpec, flat: jax.Array, *, dtype: Optional[Any] = None) -> Params:
+    """(d,) buffer -> pytree with ``spec``'s structure and leaf shapes."""
+    if flat.shape != (spec.d,):
+        raise ValueError(f"flat buffer {flat.shape} != spec total ({spec.d},)")
+    if dtype is not None:
+        flat = flat.astype(dtype)
+    leaves = [
+        jax.lax.slice(flat, (o,), (o + s,)).reshape(shape)
+        for o, s, shape in zip(spec.offsets, spec.sizes, spec.shapes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)

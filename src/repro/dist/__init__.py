@@ -1,0 +1,38 @@
+"""Sharding substrate: mesh topology + activation/grad partitioning hooks.
+
+``repro.dist`` is the one place that knows how federated clients and
+tensor-parallel shards map onto a physical ``jax.sharding.Mesh``:
+
+* ``mesh``        — production / debug mesh builders and the client-axis
+                    bookkeeping (which mesh axes enumerate FL clients).
+* ``constraints`` — in-graph sharding constraints: the residual-stream
+                    ``constrain_act`` hook the models call every block, and
+                    the small helpers ``repro.fl.round`` uses to pin the
+                    vmapped client axis (``spmd_axis_name``) and the
+                    gradient tree (``constrain_grads``) under pjit.
+
+Everything degrades to a no-op on a single device / outside a mesh
+context, so the same model code runs unmodified in smoke tests and on a
+512-chip mesh.
+"""
+
+from .constraints import (
+    constrain,
+    constrain_act,
+    constrain_grads,
+    current_mesh,
+    spmd_axis_name,
+)
+from .mesh import client_axes, make_debug_mesh, make_production_mesh, n_clients
+
+__all__ = [
+    "constrain",
+    "constrain_act",
+    "constrain_grads",
+    "current_mesh",
+    "spmd_axis_name",
+    "client_axes",
+    "make_debug_mesh",
+    "make_production_mesh",
+    "n_clients",
+]

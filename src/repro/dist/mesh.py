@@ -1,0 +1,41 @@
+"""Production meshes for the multi-pod dry-run.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run entry point must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* the
+first jax call, and smoke tests must keep seeing 1 device.
+
+Target hardware (roofline constants in launch/roofline.py): TPU v5e pods,
+256 chips/pod, 16x16 single-pod mesh (data, model) and a 2-pod 512-chip
+mesh (pod, data, model).  FL clients map onto the data axis — 16 clients
+single-pod, 32 (pod x data collapsed) multi-pod.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def client_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes that enumerate FL clients."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_clients(mesh) -> int:
+    n = 1
+    for a in client_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small host-device mesh for tests (requires >= data*model devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import Aggregation
+from repro.core import flatten
 from repro.core import relay as relay_ops
+from repro.dist import constrain_grads, spmd_axis_name
 from repro.optim import Optimizer
 from repro.optim.base import global_norm
 
@@ -49,6 +51,23 @@ class RoundConfig:
     spmd_axes: Optional[tuple] = None
     # unroll the local-steps / client scans (dry-run cost probes)
     unroll: bool = False
+    # per_client COLREL: ravel the update pytree into one (n, d) buffer and
+    # run the fused Pallas aggregation kernel (mixing mask + relay mix +
+    # blind PS sum in a single HBM pass) instead of per-leaf tensordots.
+    # The per-leaf path stays the default and is the correctness oracle.
+    use_fused_kernel: bool = False
+    # dtype of the flattened (n, d) update stack ("float32" | "bfloat16");
+    # accumulation is fp32 either way.
+    flat_dtype: str = "float32"
+    # d-axis tile of the fused kernel's grid
+    fused_block_d: int = 2048
+
+    def __post_init__(self):
+        if self.use_fused_kernel and Aggregation(self.aggregation) != Aggregation.COLREL:
+            raise ValueError(
+                "use_fused_kernel only applies to Aggregation.COLREL "
+                f"(got {self.aggregation}); it would be silently inert"
+            )
 
 
 def _tree_sub(a: Params, b: Params) -> Params:
@@ -109,13 +128,36 @@ def make_round_fn(
 
     def round_fn(params, server_state, batches, tau_up, tau_dd, A):
         if rc.mode == "per_client":
-            spmd = None
-            if rc.spmd_axes:
-                spmd = rc.spmd_axes if len(rc.spmd_axes) > 1 else rc.spmd_axes[0]
+            spmd = spmd_axis_name(rc.spmd_axes)
             deltas, losses = jax.vmap(
                 client_delta, in_axes=(None, 0), spmd_axis_name=spmd
             )(params, batches)
-            if rc.aggregation == Aggregation.COLREL:
+            if rc.aggregation == Aggregation.COLREL and rc.use_fused_kernel:
+                # flatten-once fused path: ravel the update pytree into a
+                # single contiguous (n, d) stack, stream it through the
+                # fused aggregation exactly once (mask + relay mix + blind
+                # PS sum, fp32 accumulation), unravel the (d,) delta.
+                from repro.kernels import ops as kernel_ops
+
+                spec = flatten.flat_spec(deltas, stacked=True)
+                stack = flatten.ravel_stacked(deltas, dtype=jnp.dtype(rc.flat_dtype))
+                if rc.spmd_axes:
+                    # Sharded execution: express the pass as a plain
+                    # contraction so GSPMD partitions it (per-shard partial
+                    # products + one (d,) all-reduce).  An opaque pallas
+                    # call has no partitioning rule — it would be
+                    # replicated, gathering the full stack onto every chip.
+                    w = relay_ops.effective_weights(
+                        A.astype(jnp.float32), tau_up.astype(jnp.float32),
+                        tau_dd.astype(jnp.float32),
+                    )
+                    gflat = (w @ stack.astype(jnp.float32)) / rc.n_clients
+                else:
+                    gflat = kernel_ops.fused_aggregate(
+                        A, tau_up, tau_dd, stack, block_d=rc.fused_block_d
+                    )
+                gdelta = flatten.unravel(spec, gflat, dtype=jnp.float32)
+            elif rc.aggregation == Aggregation.COLREL:
                 # faithful two-stage path: relay mix across the client axis,
                 # then the blind PS sum — exercised leaf-wise.
                 M = relay_ops.mixing_matrix(A.astype(jnp.float32), tau_dd.astype(jnp.float32))
@@ -152,10 +194,7 @@ def make_round_fn(
             # T = 1 collapse: one backward pass over all clients' batches with
             # per-client loss weights — ColRel as weighted data parallelism.
             w = _strategy_weights(rc, tau_up, tau_dd, A)
-
-            spmd = None
-            if rc.spmd_axes:
-                spmd = rc.spmd_axes if len(rc.spmd_axes) > 1 else rc.spmd_axes[0]
+            spmd = spmd_axis_name(rc.spmd_axes)
 
             def weighted_loss(p):
                 def per_client(batch):
@@ -165,8 +204,7 @@ def make_round_fn(
                 return jnp.sum(w * losses), losses
 
             (_, losses), grads = jax.value_and_grad(weighted_loss, has_aux=True)(params)
-            if grad_shardings is not None:
-                grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+            grads = constrain_grads(grads, grad_shardings)
             upd, _ = client_opt.update(grads, client_opt.init(params), params)
             gdelta = jax.tree.map(lambda u: u.astype(jnp.float32), upd)
             mean_loss = jnp.mean(losses)
@@ -186,11 +224,10 @@ def make_round_fn(
                 return loss_fn(p, {**batches, "ce_weight": seq_w})[0]
 
             loss_val, grads = jax.value_and_grad(flat_loss)(params)
-            if grad_shardings is not None:
-                # pin the gradient tree to the params' fully-sharded layout
-                # (otherwise the partitioner may materialize it replicated
-                # over the data axes — 100s of GB for the 100B+ archs)
-                grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+            # pin the gradient tree to the params' fully-sharded layout
+            # (otherwise the partitioner may materialize it replicated
+            # over the data axes — 100s of GB for the 100B+ archs)
+            grads = constrain_grads(grads, grad_shardings)
             upd, _ = client_opt.update(grads, client_opt.init(params), params)
             gdelta = jax.tree.map(lambda u: u.astype(jnp.float32), upd)
             mean_loss = loss_val

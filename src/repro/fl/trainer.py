@@ -53,6 +53,7 @@ class FLTrainer:
         local_steps: int = 8,
         aggregation: Aggregation = Aggregation.COLREL,
         mode: str = "per_client",
+        use_fused_kernel: bool = False,
         seed: int = 0,
         eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None,
     ):
@@ -65,7 +66,8 @@ class FLTrainer:
         self.params = init_params
         self.eval_fn = eval_fn
         rc = RoundConfig(
-            n_clients=n, local_steps=local_steps, mode=mode, aggregation=aggregation
+            n_clients=n, local_steps=local_steps, mode=mode, aggregation=aggregation,
+            use_fused_kernel=use_fused_kernel,
         )
         self.rc = rc
         self.server_opt = server_opt

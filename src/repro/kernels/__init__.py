@@ -2,6 +2,10 @@
 
 * ``relay_mix``       — the paper's relay consensus over flattened updates
                         (bandwidth-bound (n x n) @ (n x d) streaming matmul).
+* ``fused_aggregate`` — the full ColRel aggregation (mixing mask + relay
+                        mix + tau-weighted blind PS sum) collapsed into one
+                        grid pass: the (n, d) stack crosses HBM exactly
+                        once and the output shrinks to the (d,) PS delta.
 * ``flash_attention`` — causal online-softmax attention for 32k prefill.
 * ``ssd_scan``        — chunked SSD recurrence (Mamba2-style scalar decay,
                         jamba's sequence mixer) with the state carried in
@@ -13,7 +17,15 @@ shapes/dtypes in interpret mode and assert_allclose against the oracle.
 
 from . import ops, ref
 from .flash_attention import flash_attention_pallas
+from .fused_aggregate import fused_aggregate_pallas
 from .relay_mix import relay_mix_pallas
 from .ssd_scan import ssd_scan_pallas
 
-__all__ = ["ops", "ref", "flash_attention_pallas", "relay_mix_pallas", "ssd_scan_pallas"]
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention_pallas",
+    "fused_aggregate_pallas",
+    "relay_mix_pallas",
+    "ssd_scan_pallas",
+]

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_pallas
+from .fused_aggregate import fused_aggregate_pallas
 from .relay_mix import relay_mix_pallas
 from .ssd_scan import ssd_scan_pallas
 
@@ -24,6 +25,23 @@ def _interpret() -> bool:
 def relay_mix(mixing: jax.Array, updates: jax.Array, *, block_d: int = 2048) -> jax.Array:
     """ColRel consensus Dx~ = mixing @ updates; (n, d) streams through VMEM."""
     return relay_mix_pallas(mixing, updates, block_d=block_d, interpret=_interpret())
+
+
+def fused_aggregate(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array,
+                    updates: jax.Array, *, block_d: int = 2048) -> jax.Array:
+    """One-pass ColRel PS delta (1/n) tau_up @ ((A * tau_dd^T) @ updates):
+    the (n, d) stack crosses HBM once; output is the (d,) fp32 delta."""
+    if _interpret():
+        # Non-TPU deployable op: the same collapsed contraction in jnp (one
+        # pass over the stack, identical order/accumulation to the kernel).
+        # This is wired into every training round, so — unlike the oracle
+        # ops above — it must not emulate the tile grid in the interpreter;
+        # the kernel's tiling is validated in tests at reduced d.
+        n = updates.shape[0]
+        w = (tau_up.astype(jnp.float32) @
+             (A.astype(jnp.float32) * tau_dd.astype(jnp.float32).T)) / n
+        return w @ updates.astype(jnp.float32)
+    return fused_aggregate_pallas(A, tau_up, tau_dd, updates, block_d=block_d)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,

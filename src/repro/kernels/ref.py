@@ -13,6 +13,16 @@ def relay_mix_ref(mixing: jax.Array, updates: jax.Array) -> jax.Array:
     ).astype(updates.dtype)
 
 
+def fused_aggregate_ref(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array,
+                        updates: jax.Array) -> jax.Array:
+    """Faithful two-stage oracle for the fused aggregation kernel:
+    relay mix (Eq. (3)) then the blind PS sum (Alg. 2 line 5), fp32."""
+    n = updates.shape[0]
+    m = A.astype(jnp.float32) * tau_dd.astype(jnp.float32).T
+    tilde = m @ updates.astype(jnp.float32)
+    return (tau_up.astype(jnp.float32) @ tilde) / n
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
     """q (BH, T, D), k/v (BH, S, D) — dense softmax attention in fp32."""
     BH, T, D = q.shape

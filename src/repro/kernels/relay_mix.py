@@ -8,10 +8,18 @@ update matrix through VMEM exactly once at full HBM bandwidth with the tiny
 mixing matrix pinned in VMEM, instead of letting XLA materialize masked
 intermediates (A * tau^T, broadcasts) in HBM.
 
-Tiling: grid over the d axis; block = (n_pad, block_d) where n_pad rounds
-the client count up to the 8-sublane boundary and block_d is a multiple of
-the 128-lane boundary.  Each grid step does an (n_pad x n_pad) @
-(n_pad x block_d) MXU matmul — d/block_d fully independent tiles.
+Tiling: grid of ``cdiv(d, block_d)`` over the d axis; block = (n, block_d)
+with block_d a multiple of the 128-lane boundary.  Each grid step does an
+(n x n) @ (n x block_d) MXU matmul — fully independent tiles.
+
+The update stack is **never copied or padded on the host**: a partial
+final tile reads garbage in its out-of-range lanes, but every output
+column depends only on its own input column and Pallas masks out-of-range
+writes, so the garbage never lands.  (The previous version materialized a
+zero-padded (n_pad, d_pad) copy of the whole stack — a full second HBM
+write+read for a kernel whose entire point is single-pass streaming.)
+Sub-tile client counts (n not a multiple of the 8-sublane boundary) are
+handled by Mosaic's internal masking; n is tiny so the cost is nil.
 """
 
 from __future__ import annotations
@@ -31,10 +39,6 @@ def _relay_mix_kernel(m_ref, x_ref, o_ref):
     ).astype(o_ref.dtype)
 
 
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def relay_mix_pallas(
     mixing: jax.Array,  # (n, n) float32  — A * tau_dd^T, precomputed
@@ -44,20 +48,17 @@ def relay_mix_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     n, d = updates.shape
-    n_pad = _round_up(max(n, 8), 8)
-    d_pad = _round_up(d, block_d)
-    m = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(mixing.astype(jnp.float32))
-    x = jnp.zeros((n_pad, d_pad), updates.dtype).at[:n, :d].set(updates)
+    m = mixing.astype(jnp.float32)
+    bd = min(block_d, d)
 
-    out = pl.pallas_call(
+    return pl.pallas_call(
         _relay_mix_kernel,
-        grid=(d_pad // block_d,),
+        grid=(pl.cdiv(d, bd),),
         in_specs=[
-            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),  # mixing pinned
-            pl.BlockSpec((n_pad, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # mixing pinned in VMEM
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((n_pad, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), updates.dtype),
+        out_specs=pl.BlockSpec((n, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d), updates.dtype),
         interpret=interpret,
-    )(m, x)
-    return out[:n, :d]
+    )(m, updates)

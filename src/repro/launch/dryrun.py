@@ -35,6 +35,15 @@ from repro.launch.steps import build_step
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict, a per-device list of dicts,
+    or None depending on jax version/backend — normalize to one dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost or {}
+
+
 def _tokens_for(shape_name: str, fl_mode: str) -> float:
     s = INPUT_SHAPES[shape_name]
     if s.kind == "train":
@@ -78,7 +87,7 @@ def _probe_costs(arch_id, shape_name, mesh, aggregation, fl_mode, cfg, k) -> dic
         compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(
             *lower_args
         ).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -108,7 +117,7 @@ def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         hlo = compiled.as_text()
 
     coll = collective_bytes(hlo)

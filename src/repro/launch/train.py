@@ -36,11 +36,22 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--batch", type=int, default=4, help="per-client batch")
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
-    ap.add_argument("--aggregation", default="colrel_fused",
-                    choices=[a.value for a in Aggregation])
+    ap.add_argument("--aggregation", default=None,
+                    choices=[a.value for a in Aggregation],
+                    help="default: colrel with --fused-kernel, else colrel_fused")
+    ap.add_argument("--fused-kernel", action="store_true",
+                    help="flatten-once fused Pallas aggregation (COLREL only)")
     ap.add_argument("--p-up", type=float, default=0.3)
     ap.add_argument("--p-c", type=float, default=0.8)
     args = ap.parse_args()
+
+    # the fused kernel only exists on the faithful COLREL path; refuse the
+    # silently-inert combination rather than measuring the wrong code.
+    if args.aggregation is None:
+        args.aggregation = "colrel" if args.fused_kernel else "colrel_fused"
+    elif args.fused_kernel and Aggregation(args.aggregation) != Aggregation.COLREL:
+        ap.error(f"--fused-kernel requires --aggregation colrel "
+                 f"(got {args.aggregation})")
 
     arch = get_arch(args.arch)
     cfg = arch.smoke() if args.smoke else arch.full()
@@ -56,7 +67,8 @@ def main():
     A = jnp.asarray(res.A, jnp.float32)
 
     rc = RoundConfig(n_clients=n, local_steps=args.local_steps,
-                     mode="per_client", aggregation=Aggregation(args.aggregation))
+                     mode="per_client", aggregation=Aggregation(args.aggregation),
+                     use_fused_kernel=args.fused_kernel)
     server_opt = sgd_momentum(1.0, beta=0.9)
     round_fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.25), server_opt, rc))
     sstate = server_opt.init(params)

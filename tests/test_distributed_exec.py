@@ -48,9 +48,9 @@ SCRIPT = textwrap.dedent(
 
     server = sgd_momentum(1.0, beta=0.9)
 
-    def run(sharded, aggregation):
+    def run(sharded, aggregation, fused_kernel=False):
         rc = RoundConfig(n_clients=n, local_steps=T, mode="per_client",
-                         aggregation=aggregation,
+                         aggregation=aggregation, use_fused_kernel=fused_kernel,
                          spmd_axes=("data",) if sharded else None)
         fn = make_round_fn(bundle.loss_fn, sgd(0.1), server, rc)
         if sharded:
@@ -70,11 +70,17 @@ SCRIPT = textwrap.dedent(
     p_ref, _, met_ref = run(False, Aggregation.COLREL)
     p_dist, _, met_dist = run(True, Aggregation.COLREL)
     p_fused, _, _ = run(True, Aggregation.COLREL_FUSED)
+    p_flat, _, _ = run(True, Aggregation.COLREL, fused_kernel=True)
 
     for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_dist)):
         np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
                                    atol=3e-5, rtol=3e-4)
     for a, b in zip(jax.tree.leaves(p_dist), jax.tree.leaves(p_fused)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   atol=3e-5, rtol=3e-4)
+    # flatten-once fused engine under pjit (sharded deltas -> GSPMD-
+    # partitioned single-pass contraction) == the per-leaf reference
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_flat)):
         np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
                                    atol=3e-5, rtol=3e-4)
     assert abs(float(met_ref["loss"]) - float(met_dist["loss"])) < 1e-4

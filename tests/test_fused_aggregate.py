@@ -1,0 +1,213 @@
+"""The flatten-once fused aggregation engine vs its faithful oracles.
+
+Three layers of equivalence, none needing extra deps:
+  1. kernel level  — fused_aggregate_pallas == relay_mix + ps_aggregate
+                     (the two-stage path in core/relay.py) over random tau
+                     draws, f32 and bf16, n off the 8-sublane grid and d
+                     off the block_d grid;
+  2. flatten level — ravel_stacked/unravel round-trips real model param
+                     trees bit-exactly;
+  3. round level   — a per_client COLREL round with use_fused_kernel=True
+                     matches the per-leaf tensordot round end to end.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flatten
+from repro.core.relay import ps_aggregate, relay_mix
+from repro.kernels import ref
+from repro.kernels.fused_aggregate import fused_aggregate_pallas
+
+RNG = np.random.default_rng(7)
+
+
+def _random_round(n, rng):
+    A = jnp.asarray(rng.random((n, n)) * 0.5 + 0.1, jnp.float32)
+    tau_up = jnp.asarray((rng.random(n) < 0.7).astype(np.float32))
+    tau_dd = jnp.asarray((rng.random((n, n)) < 0.5).astype(np.float32))
+    return A, tau_up, tau_dd
+
+
+def _two_stage_oracle(A, tau_up, tau_dd, X):
+    """The faithful pipeline exactly as core/relay.py composes it, fp32."""
+    tilde = relay_mix(X.astype(jnp.float32), A, tau_dd)
+    return ps_aggregate(tilde, tau_up)
+
+
+@pytest.mark.parametrize("n", [4, 10, 16, 33])  # 4/10/33 are off the 8-sublane grid
+@pytest.mark.parametrize("d", [96, 1000, 4096])  # 96/1000 are off the block_d grid
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_kernel_matches_two_stage_oracle(n, d, dtype):
+    A, tau_up, tau_dd = _random_round(n, RNG)
+    X = jnp.asarray(RNG.normal(size=(n, d))).astype(dtype)
+    got = fused_aggregate_pallas(A, tau_up, tau_dd, X, block_d=512, interpret=True)
+    want = _two_stage_oracle(A, tau_up, tau_dd, X)
+    assert got.shape == (d,) and got.dtype == jnp.float32
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_fused_kernel_random_tau_draws(seed):
+    """Acceptance sweep: <=1e-5 max abs error (f32) over randomized taus."""
+    rng = np.random.default_rng(seed)
+    n, d = int(rng.integers(2, 24)), int(rng.integers(1, 2000))
+    A, tau_up, tau_dd = _random_round(n, rng)
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    got = fused_aggregate_pallas(A, tau_up, tau_dd, X, block_d=256, interpret=True)
+    want = ref.fused_aggregate_ref(A, tau_up, tau_dd, X)
+    assert float(jnp.abs(got - want).max()) <= 1e-5
+
+
+def test_fused_kernel_block_larger_than_d():
+    """block_d > d collapses to a single masked tile."""
+    n, d = 8, 100
+    A, tau_up, tau_dd = _random_round(n, RNG)
+    X = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    got = fused_aggregate_pallas(A, tau_up, tau_dd, X, block_d=4096, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.fused_aggregate_ref(A, tau_up, tau_dd, X)),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# flatten round-trips on real model parameter trees
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "olmo-1b"])
+def test_flatten_roundtrip_model_params(arch):
+    from repro.configs.base import get_arch
+    from repro.models import build
+
+    cfg = get_arch(arch).smoke()
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    spec = flatten.flat_spec(params)
+    flat = flatten.ravel(params, dtype=jnp.float32)
+    assert flat.shape == (spec.d,)
+    back = flatten.unravel(spec, flat)
+    assert jax.tree.structure(back) == jax.tree.structure(params)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(params)):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b, np.float32))
+
+
+def test_flatten_stacked_roundtrip_and_layout():
+    """Stacked ravel keeps client rows independent and leaf order stable."""
+    n = 3
+    tree = {
+        "w": jnp.asarray(RNG.normal(size=(n, 4, 5)), jnp.float32),
+        "b": {"inner": jnp.asarray(RNG.normal(size=(n, 7)), jnp.float32)},
+        "s": jnp.asarray(RNG.normal(size=(n,)), jnp.float32).reshape(n, *()),
+    }
+    # leaves (n, *shape); per-client view must equal the per-tree ravel
+    spec = flatten.flat_spec(tree, stacked=True)
+    stack = flatten.ravel_stacked(tree)
+    assert stack.shape == (n, spec.d)
+    for i in range(n):
+        client_tree = jax.tree.map(lambda x: x[i], tree)
+        np.testing.assert_array_equal(
+            np.asarray(stack[i]), np.asarray(flatten.ravel(client_tree))
+        )
+        back = flatten.unravel(spec, stack[i])
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(client_tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unravel_rejects_wrong_length():
+    spec = flatten.flat_spec({"a": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError):
+        flatten.unravel(spec, jnp.zeros((7,)))
+
+
+def test_round_config_rejects_inert_fused_flag():
+    """use_fused_kernel + non-COLREL aggregation would silently run the
+    scalar-weights path; RoundConfig refuses the combination outright."""
+    from repro.core import Aggregation
+    from repro.fl.round import RoundConfig
+
+    with pytest.raises(ValueError, match="use_fused_kernel"):
+        RoundConfig(n_clients=4, local_steps=1,
+                    aggregation=Aggregation.FEDAVG_BLIND, use_fused_kernel=True)
+
+
+# ---------------------------------------------------------------------------
+# round level: fused engine == per-leaf tensordot path end to end
+# ---------------------------------------------------------------------------
+
+
+def test_round_fused_kernel_matches_per_leaf_path():
+    from repro.core import Aggregation, optimize_weights, sample_round, topology
+    from repro.fl.round import RoundConfig, make_round_fn
+    from repro.optim import sgd, sgd_momentum
+
+    n, T, dim = 6, 3, 16
+    H = jnp.eye(dim) * 2.0
+
+    def loss_fn(params, batch):
+        d = params["x"] - batch["center"][0]
+        return 0.5 * d @ (H @ d), {}
+
+    m = topology.fully_connected(n, 0.5, p_c=0.8)
+    A = jnp.asarray(optimize_weights(m, sweeps=5, fine_tune_sweeps=5).A, jnp.float32)
+    rng = np.random.default_rng(0)
+    tu, td = sample_round(m, rng)
+    params = {"x": jnp.zeros((dim,), jnp.float32),
+              "y": {"z": jnp.ones((4, 3), jnp.float32)}}
+    batches = {"center": jnp.asarray(rng.normal(size=(n, T, 1, dim)), jnp.float32)}
+
+    def loss2(params, batch):
+        l, _ = loss_fn({"x": params["x"]}, batch)
+        return l + 0.05 * jnp.sum(params["y"]["z"] ** 2), {}
+
+    server = sgd_momentum(1.0, beta=0.9)
+    out = {}
+    for fused in (False, True):
+        rc = RoundConfig(n_clients=n, local_steps=T, mode="per_client",
+                         aggregation=Aggregation.COLREL, use_fused_kernel=fused,
+                         fused_block_d=128)
+        fn = jax.jit(make_round_fn(loss2, sgd(0.05), server, rc))
+        p2, _, metrics = fn(params, server.init(params), batches,
+                            jnp.asarray(tu, jnp.float32),
+                            jnp.asarray(td, jnp.float32), A)
+        out[fused] = (p2, metrics)
+    for a, b in zip(jax.tree.leaves(out[False][0]), jax.tree.leaves(out[True][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-6)
+    assert abs(float(out[False][1]["loss"]) - float(out[True][1]["loss"])) < 1e-6
+
+
+def test_round_config_flat_dtype_bf16_close_to_f32():
+    """bf16 stack: same round, looser tolerance (fp32 accumulation)."""
+    from repro.core import Aggregation, sample_round, topology
+    from repro.fl.round import RoundConfig, make_round_fn
+    from repro.optim import sgd, sgd_momentum
+
+    n, T, dim = 4, 2, 32
+
+    def loss_fn(params, batch):
+        d = params["x"] - batch["center"][0]
+        return 0.5 * jnp.sum(d * d), {}
+
+    m = topology.fully_connected(n, 0.6, p_c=0.9)
+    rng = np.random.default_rng(1)
+    tu, td = sample_round(m, rng)
+    A = jnp.asarray(np.eye(n), jnp.float32)
+    params = {"x": jnp.zeros((dim,), jnp.float32)}
+    batches = {"center": jnp.asarray(rng.normal(size=(n, T, 1, dim)), jnp.float32)}
+    server = sgd_momentum(1.0, beta=0.0)
+    got = {}
+    for flat_dtype in ("float32", "bfloat16"):
+        rc = RoundConfig(n_clients=n, local_steps=T, mode="per_client",
+                         aggregation=Aggregation.COLREL, use_fused_kernel=True,
+                         flat_dtype=flat_dtype, fused_block_d=128)
+        fn = jax.jit(make_round_fn(loss_fn, sgd(0.1), server, rc))
+        p2, _, _ = fn(params, server.init(params), batches,
+                      jnp.asarray(tu, jnp.float32), jnp.asarray(td, jnp.float32), A)
+        got[flat_dtype] = np.asarray(p2["x"])
+    np.testing.assert_allclose(got["bfloat16"], got["float32"], atol=5e-3, rtol=5e-2)
