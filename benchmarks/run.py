@@ -19,7 +19,7 @@ import traceback
 
 
 def all_benches():
-    from . import kernels_bench, paper_figures, roofline_report, theory
+    from . import channel_bench, kernels_bench, paper_figures, roofline_report, theory
 
     return {
         "fig2a": paper_figures.bench_fig2a,
@@ -31,6 +31,8 @@ def all_benches():
         "fused_aggregate": kernels_bench.bench_fused_aggregate,
         "flash_attn": kernels_bench.bench_flash_attention,
         "roofline": roofline_report.bench_dryrun_roofline,
+        "channel_sampler": channel_bench.bench_channel_sampler,
+        "channel_adaptive": channel_bench.bench_channel_adaptive,
     }
 
 

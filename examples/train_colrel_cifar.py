@@ -7,6 +7,16 @@ DESIGN.md §7).  Saves a JSON training log + msgpack checkpoint.
 
     PYTHONPATH=src python examples/train_colrel_cifar.py \
         --topology fig2b --strategy colrel --non-iid-s 3 --rounds 200
+
+Beyond the paper, ``--channel`` swaps the i.i.d. connectivity for a
+dynamic channel preset (``markov`` = bursty Gilbert–Elliott blockage
+with the same marginals, ``mobility`` = waypoint-drifting mmWave
+geometry; see ``repro/configs/channels.py``), and ``--adaptive`` drops
+the oracle link knowledge: alpha is re-optimized every ``--reopt-every``
+rounds from online link estimates.
+
+    PYTHONPATH=src python examples/train_colrel_cifar.py \
+        --channel markov --adaptive --rounds 200
 """
 
 import argparse
@@ -15,8 +25,9 @@ import json
 import jax
 import numpy as np
 
+from repro.channel import AdaptiveConfig, AdaptiveWeightSchedule
 from repro.checkpoint import save_checkpoint
-from repro.configs import colrel_paper
+from repro.configs import CHANNEL_PRESETS, colrel_paper, make_channel
 from repro.core import Aggregation, fedavg_weights, optimize_weights, topology
 from repro.data import partition_iid, partition_sort_and_partition, synthetic_cifar
 from repro.data.pipeline import make_federated_clients
@@ -40,6 +51,13 @@ def main():
                     choices=["colrel", "fedavg_blind", "fedavg_nonblind", "fedavg_perfect"])
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--non-iid-s", type=int, default=0, help="0 = IID")
+    ap.add_argument("--channel", default="static", choices=sorted(CHANNEL_PRESETS),
+                    help="link dynamics preset (repro/configs/channels.py)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="estimate links online + re-optimize alpha "
+                         "(no oracle link knowledge)")
+    ap.add_argument("--reopt-every", type=int, default=50,
+                    help="adaptive alpha re-optimization cadence (rounds)")
     ap.add_argument("--full-width", action="store_true",
                     help="paper-width ResNet-20 (slow on CPU)")
     ap.add_argument("--out", default="colrel_cifar")
@@ -47,13 +65,40 @@ def main():
 
     setup = colrel_paper.full() if args.full_width else colrel_paper.reduced()
     link_model = TOPOLOGIES[args.topology]()
+    channel = make_channel(args.channel, link_model, seed=0)
+    # mobility derives its own (drifting) geometry; round-0 model otherwise
+    # equals the chosen topology (markov preserves its marginals exactly)
+    init_model = channel.model_for_round(0)
+
+    adaptive = None
+    if args.adaptive:
+        if args.strategy != "colrel":
+            raise SystemExit(
+                "--adaptive re-optimizes the relay alpha, which only the "
+                "colrel strategy reads; fedavg_* baselines ignore A"
+            )
+        adaptive = AdaptiveWeightSchedule(
+            init_model.n,
+            AdaptiveConfig(
+                every=args.reopt_every,
+                warmup=min(args.reopt_every, 20),
+                # forget old evidence under drifting geometry
+                decay=0.995 if args.channel.startswith("mobility") else 1.0,
+                prune_below=0.02,
+            ),
+        )
 
     if args.strategy == "colrel":
-        res = optimize_weights(link_model, sweeps=30, fine_tune_sweeps=30)
-        A, agg = res.A, Aggregation.COLREL
-        print(f"COPT-alpha: S {res.S_init:.2f} -> {res.S:.2f}")
+        if args.adaptive:
+            # no oracle link knowledge: start blind, let re-opt take over
+            A, agg = fedavg_weights(init_model.n), Aggregation.COLREL
+            print(f"adaptive alpha: identity start, re-opt every {args.reopt_every}")
+        else:
+            res = optimize_weights(init_model, sweeps=30, fine_tune_sweeps=30)
+            A, agg = res.A, Aggregation.COLREL
+            print(f"COPT-alpha: S {res.S_init:.2f} -> {res.S:.2f}")
     else:
-        A, agg = fedavg_weights(link_model.n), Aggregation(args.strategy)
+        A, agg = fedavg_weights(init_model.n), Aggregation(args.strategy)
 
     images, labels = synthetic_cifar(n=10000, seed=1)
     ev_img, ev_lab = synthetic_cifar(n=2000, seed=2)
@@ -72,11 +117,11 @@ def main():
         return m
 
     trainer = FLTrainer(
-        bundle.loss_fn, bundle.init(jax.random.PRNGKey(0)), link_model, A, clients,
+        bundle.loss_fn, bundle.init(jax.random.PRNGKey(0)), init_model, A, clients,
         sgd(setup.lr, weight_decay=setup.weight_decay),
         sgd_momentum(1.0, beta=setup.server_momentum),
         local_steps=setup.local_steps, aggregation=agg, seed=0,
-        eval_fn=eval_fn,
+        eval_fn=eval_fn, channel=channel, adaptive=adaptive,
     )
     trainer.run(args.rounds, eval_every=max(args.rounds // 10, 1), verbose=True)
 

@@ -1,6 +1,7 @@
 """repro: ColRel (collaborative-relaying federated learning) in JAX.
 
-Subpackages: core (the paper), fl (federated runtime), models (the zoo),
+Subpackages: core (the paper), channel (dynamic link processes + online
+estimation + adaptive alpha), fl (federated runtime), models (the zoo),
 optim, data, dist, kernels (Pallas), checkpoint, configs, launch.
 """
 

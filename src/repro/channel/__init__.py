@@ -1,0 +1,39 @@
+"""Dynamic channel simulation: temporally-correlated outage traces,
+drifting geometry, online link estimation, adaptive consensus weights.
+
+One protocol — :class:`ChannelProcess` (``tau_for_round(r)`` /
+``model_for_round(r)``) — unifies the paper's i.i.d. model
+(:class:`StaticChannel`), Gilbert–Elliott bursty blockage
+(:class:`MarkovChannel`, scan-sampled on device), and waypoint mobility
+(:class:`MobilityChannel`).  :class:`AdaptiveWeightSchedule` +
+:class:`LinkEstimator` replace oracle link knowledge with online
+estimates feeding periodic COPT-alpha re-optimization.
+"""
+
+from .base import ChannelProcess, StaticChannel
+from .estimator import LinkEstimator
+from .markov import (
+    GEParams,
+    MarkovChannel,
+    channel_key,
+    gilbert_elliott,
+    sample_ge_rounds,
+    sample_ge_rounds_host,
+)
+from .mobility import MobilityChannel
+from .schedule import AdaptiveConfig, AdaptiveWeightSchedule
+
+__all__ = [
+    "ChannelProcess",
+    "StaticChannel",
+    "MarkovChannel",
+    "MobilityChannel",
+    "GEParams",
+    "channel_key",
+    "gilbert_elliott",
+    "sample_ge_rounds",
+    "sample_ge_rounds_host",
+    "LinkEstimator",
+    "AdaptiveConfig",
+    "AdaptiveWeightSchedule",
+]

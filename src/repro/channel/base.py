@@ -1,0 +1,72 @@
+"""The ``ChannelProcess`` abstraction: one API for every link dynamic.
+
+The paper (and ``core/connectivity.py``) treats links as Bernoulli draws
+i.i.d. across rounds with oracle-known probabilities.  Real mmWave
+blockages are bursty and time-correlated, and client mobility drifts the
+marginals themselves.  Everything the trainer needs from a channel is
+
+* ``tau_for_round(r)`` — the round-r connectivity realization
+  ``(tau_up (n,), tau_dd (n, n))``, same conventions as
+  :func:`repro.core.connectivity.sample_round`;
+* ``model_for_round(r)`` — the *ground-truth* per-round marginals as a
+  :class:`LinkModel` (the oracle view, used for evaluation / logging
+  only; adaptive training must not peek at it).
+
+Rounds are consumed in nondecreasing order (the FL trainer advances one
+round at a time); stateful processes (Markov chains, mobility) may
+refuse to rewind.
+
+Concrete processes:
+
+* :class:`StaticChannel` (here)           — the paper's i.i.d. model.
+* :class:`~repro.channel.markov.MarkovChannel`     — Gilbert–Elliott
+  bursty blockage, scan-sampled on device in blocks.
+* :class:`~repro.channel.mobility.MobilityChannel` — waypoint mobility
+  re-deriving the mmWave geometry every epoch.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.connectivity import LinkModel, sample_round
+
+__all__ = ["ChannelProcess", "StaticChannel"]
+
+
+@runtime_checkable
+class ChannelProcess(Protocol):
+    """Anything that can serve per-round connectivity realizations."""
+
+    @property
+    def n(self) -> int: ...
+
+    def tau_for_round(self, r: int) -> tuple[np.ndarray, np.ndarray]: ...
+
+    def model_for_round(self, r: int) -> LinkModel: ...
+
+
+class StaticChannel:
+    """The paper's i.i.d. channel wrapped in the ``ChannelProcess`` API."""
+
+    def __init__(self, model: LinkModel, seed: int = 0):
+        self.model = model
+        self._rng = np.random.default_rng(seed)
+        self._next = 0
+
+    @property
+    def n(self) -> int:
+        return self.model.n
+
+    def tau_for_round(self, r: int) -> tuple[np.ndarray, np.ndarray]:
+        if r != self._next:
+            raise ValueError(
+                f"StaticChannel serves rounds in order; expected {self._next}, got {r}"
+            )
+        self._next += 1
+        return sample_round(self.model, self._rng)
+
+    def model_for_round(self, r: int) -> LinkModel:
+        return self.model

@@ -1,0 +1,415 @@
+"""Gilbert–Elliott bursty blockage chains, scan-sampled on device.
+
+Each link carries a hidden two-state *gate* chain (Good/Bad — the mmWave
+blocker): in Bad the link is down; in Good the link succeeds with the
+conditional probability that restores the target per-round marginal.
+The gate chain is parameterized by its stationary Good occupancy ``pi``
+and its *memory* ``lam`` (the chain's second eigenvalue = the lag-1
+autocorrelation of the gate):
+
+    P(Bad -> Good)  = g = (1 - lam) * pi
+    P(Good -> Bad)  = b = (1 - lam) * (1 - pi)
+
+so the stationary law is ``Bernoulli(pi)`` for every ``lam`` and the
+expected blockage burst lasts ``1/g`` rounds.  ``lam = 0`` recovers the
+paper's i.i.d. channel *exactly*: gates are drawn fresh every round and
+the per-round law of ``(tau_up, tau_dd)`` coincides with
+:func:`repro.core.connectivity.sample_round` for the same
+:class:`LinkModel` — burstiness is added without moving any marginal.
+
+D2D pairs keep channel reciprocity: each unordered pair {i<j} shares one
+gate chain (a blocker obstructs both directions), and conditional on
+Good the ordered pair ``(tau_ij, tau_ji)`` is drawn from the same
+one-uniform coupling as the static sampler, with the good-state joint
+``E/pi`` preserving ``E[tau_ij tau_ji] = E_ij`` unconditionally.
+
+Two samplers produce identical distributions:
+
+* :func:`sample_ge_rounds_host` — the plain numpy per-round loop
+  (reference; O(R) python iterations);
+* :func:`sample_ge_rounds` — one fused :func:`jax.lax.scan` over rounds
+  that emits the entire ``(R, n)`` / ``(R, n, n)`` tau tensor in a
+  single device pass.  Perf anatomy (n=32, R=2000 on CPU): the scan body
+  itself is trivial selects, so everything else is hoisted out of the
+  loop — all randomness is one bulk ``jax.random.bits`` draw of 16-bit
+  lanes (per-step key splitting would serialize threefry work and
+  dominate), link tests compare those lanes against integer thresholds
+  on a 15-bit lattice (``u >> 1 < round(p * 2^15)``, pure uint16, no
+  float unpack; see ``_LATTICE`` — quantization <= 2^-16, far below any
+  statistical resolution), and the ``(R, n, n)`` tensor is
+  built by a vectorized pair-index *gather* after the scan (an XLA CPU
+  scatter is ~10x slower).  Use :func:`channel_key` (``rbg`` impl) —
+  threefry bit generation alone would be ~2.5x the whole budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.connectivity import LinkModel
+
+__all__ = [
+    "GEParams",
+    "gilbert_elliott",
+    "channel_key",
+    "sample_ge_rounds",
+    "sample_ge_rounds_host",
+    "MarkovChannel",
+]
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class GEParams:
+    """Gilbert–Elliott chain parameters for every link of a ``LinkModel``.
+
+    ``pi_*`` are stationary Good-state occupancies, ``lam_*`` the gate
+    memories; uplinks are indexed ``0..n-1``, D2D gates by the unordered
+    pair index of ``np.triu_indices(n, 1)``.
+    """
+
+    model: LinkModel
+    pi_up: np.ndarray  # (n,)
+    lam_up: np.ndarray  # (n,)
+    pi_dd: np.ndarray  # (m,) one gate per unordered pair {i<j}
+    lam_dd: np.ndarray  # (m,)
+
+    @property
+    def n(self) -> int:
+        return self.model.n
+
+    def pair_indices(self) -> tuple[np.ndarray, np.ndarray]:
+        return np.triu_indices(self.n, k=1)
+
+    def expected_bad_burst(self) -> tuple[np.ndarray, np.ndarray]:
+        """Mean blockage sojourn (rounds) for uplink and pair gates."""
+        g_up = (1.0 - self.lam_up) * self.pi_up
+        g_dd = (1.0 - self.lam_dd) * self.pi_dd
+        return 1.0 / np.maximum(g_up, _EPS), 1.0 / np.maximum(g_dd, _EPS)
+
+    def lag1_uplink(self) -> np.ndarray:
+        """Lag-1 autocorrelation of tau_up[i]: q (1-pi) lam / (1-p)."""
+        p, pi = self.model.p, self.pi_up
+        q = np.where(pi > 0, p / np.maximum(pi, _EPS), 0.0)
+        denom = np.maximum(1.0 - p, _EPS)
+        return np.where(p < 1.0, q * (1.0 - pi) * self.lam_up / denom, 0.0)
+
+
+def _conditionals(params: GEParams):
+    """Good-state conditional laws (q_up, qij, qji, e_cond) + pair index."""
+    model, n = params.model, params.n
+    iu, ju = params.pair_indices()
+    q_up = np.where(params.pi_up > 0, model.p / np.maximum(params.pi_up, _EPS), 0.0)
+    pi = np.maximum(params.pi_dd, _EPS)
+    qij = model.P[iu, ju] / pi
+    qji = model.P[ju, iu] / pi
+    e_c = model.E[iu, ju] / pi
+    return q_up, qij, qji, e_c, iu, ju
+
+
+def gilbert_elliott(
+    model: LinkModel,
+    memory: Union[float, tuple[float, float]] = 0.9,
+    occupancy: Optional[float] = None,
+) -> GEParams:
+    """Fit GE chains whose per-round law matches ``model`` exactly.
+
+    Parameters
+    ----------
+    memory:
+        Gate lag-1 autocorrelation ``lam`` in ``[0, 1)``; a scalar, or a
+        ``(lam_uplink, lam_d2d)`` pair.  ``0`` = the i.i.d. paper model;
+        ``0.9`` means blockage bursts ~10x longer than i.i.d. draws.
+    occupancy:
+        Target Good-state occupancy ``pi``.  ``None`` fits the *tightest*
+        feasible gate (``pi_up = p_i``; for pairs the Fréchet-driven
+        floor) so that burstiness is maximal; a float is clipped up to
+        feasibility per link.  Links with zero marginal get an inert
+        always-Good gate.
+
+    Feasibility: marginals require ``pi >= p`` (uplink) and
+    ``pi >= max(p_ij, p_ji, p_ij + p_ji - E_ij)`` (pair — the lower
+    Fréchet bound of the Good-state coupling).
+    """
+    if isinstance(memory, tuple):
+        lam_up_s, lam_dd_s = memory
+    else:
+        lam_up_s = lam_dd_s = float(memory)
+    for lam in (lam_up_s, lam_dd_s):
+        if not 0.0 <= lam < 1.0:
+            raise ValueError(f"memory must be in [0, 1), got {lam}")
+
+    n = model.n
+    iu, ju = np.triu_indices(n, k=1)
+    pij, pji, eij = model.P[iu, ju], model.P[ju, iu], model.E[iu, ju]
+
+    floor_up = model.p
+    floor_dd = np.maximum(np.maximum(pij, pji), pij + pji - eij)
+    if occupancy is None:
+        pi_up, pi_dd = floor_up.copy(), floor_dd.copy()
+    else:
+        if not 0.0 < occupancy <= 1.0:
+            raise ValueError(f"occupancy must be in (0, 1], got {occupancy}")
+        pi_up = np.maximum(floor_up, occupancy)
+        pi_dd = np.maximum(floor_dd, occupancy)
+    # inert links: permanently-Good gate, zero conditional success.
+    pi_up = np.where(floor_up <= 0.0, 1.0, pi_up)
+    pi_dd = np.where(floor_dd <= 0.0, 1.0, pi_dd)
+
+    lam_up = np.full(n, lam_up_s)
+    lam_dd = np.full(iu.shape[0], lam_dd_s)
+    # gates pinned at pi == 1 have no dynamics to remember
+    lam_up = np.where(pi_up >= 1.0, 0.0, lam_up)
+    lam_dd = np.where(pi_dd >= 1.0, 0.0, lam_dd)
+    return GEParams(model, pi_up, lam_up, pi_dd, lam_dd)
+
+
+# ---------------------------------------------------------------------------
+# Host-loop reference sampler (numpy, one python iteration per round)
+# ---------------------------------------------------------------------------
+
+
+def sample_ge_rounds_host(
+    params: GEParams, rng: np.random.Generator, rounds: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Reference per-round loop: (R, n) uplinks and (R, n, n) D2D.
+
+    Deliberately written in the same per-round idiom as the static
+    :func:`~repro.core.connectivity.sample_round` loop this subsystem
+    replaces — one python iteration per round drawing an (n, n) uniform
+    matrix with fresh pair-index extraction, the readable specification
+    of the law (and the baseline ``benchmarks/channel_bench.py`` times
+    the fused scan against).
+    """
+    n = params.n
+    q_up, qij, qji, e_c, _, _ = _conditionals(params)
+    g_up = (1.0 - params.lam_up) * params.pi_up
+    b_up = (1.0 - params.lam_up) * (1.0 - params.pi_up)
+    g_dd = (1.0 - params.lam_dd) * params.pi_dd
+    b_dd = (1.0 - params.lam_dd) * (1.0 - params.pi_dd)
+
+    iu0, ju0 = params.pair_indices()
+    su = rng.random(n) < params.pi_up
+    sp = rng.random(iu0.shape[0]) < params.pi_dd
+    ups = np.empty((rounds, n))
+    dds = np.empty((rounds, n, n))
+    for r in range(rounds):
+        iu, ju = np.triu_indices(n, k=1)  # as sample_round does, per call
+        # gate transitions: one uniform per link
+        u1 = rng.random(n)
+        su = np.where(su, u1 >= b_up, u1 < g_up)
+        u2 = np.triu(rng.random((n, n)), k=1)[iu, ju]
+        sp = np.where(sp, u2 >= b_dd, u2 < g_dd)
+        # conditional emissions given Good gates
+        ups[r] = su & (rng.random(n) < q_up)
+        uu = np.triu(rng.random((n, n)), k=1)[iu, ju]
+        tij = sp & (uu < qij)
+        tji = sp & ((uu < e_c) | ((uu >= qij) & (uu < qij + qji - e_c)))
+        dd = np.eye(n)
+        dd[iu, ju] = tij
+        dd[ju, iu] = tji
+        dds[r] = dd
+    return ups, dds
+
+
+# ---------------------------------------------------------------------------
+# Fused device sampler: one lax.scan over rounds
+# ---------------------------------------------------------------------------
+
+
+# Uniform draws live on a 15-bit lattice: tests are `u < round(p * 2^15)`
+# with u uniform on {0..2^15-1}.  15 (not 16) bits so the thresholds —
+# which must reach 2^15 for an exact always-true p = 1 — still fit in
+# uint16 and every comparison stays in the uint16 domain (a uint32
+# promotion would materialize extra (R, ·) buffers on the hot path).
+# p = 0 maps to threshold 0 (exact never-true); the law is quantized by
+# at most 2^-16, far below any statistical resolution.
+_LATTICE = 32768
+
+
+def _ge_core(arrs, state, key, *, rounds: int, n: int):
+    """Scan the gate chains for ``rounds`` steps and emit all taus.
+
+    ``arrs``: dict of (device) per-link integer-threshold arrays;
+    ``state``: ``(gate_up (n,) bool, gate_pair (m,) bool)``.  The scan
+    body is pure integer compares + selects on (n,) / (m,) lanes; RNG
+    and the (n, n) assembly happen outside the loop (see module doc).
+    """
+    m = arrs["t_qij"].shape[0]
+    lanes = 2 * n + 2 * m  # per round: gate_up, gate_pair, cond_up, cond_pair
+    u16 = jax.random.bits(key, (rounds, lanes), jnp.uint16)
+    u15 = u16 >> jnp.uint16(1)  # one pass; see _LATTICE
+    u_gate = u15[:, : n + m]
+    u_up = u15[:, n + m : 2 * n + m]
+    u_dd = u15[:, 2 * n + m :]
+    t_g = jnp.concatenate([arrs["t_g_up"], arrs["t_g_dd"]])
+    t_b = jnp.concatenate([arrs["t_b_up"], arrs["t_b_dd"]])
+
+    # Only the gate recurrence is sequential — scan it with the smallest
+    # possible per-step payload (one packed (n+m,) bool state).  The
+    # conditional emissions are independent given the gates, so they run
+    # below as a few big fused elementwise ops over the whole (R, ·)
+    # trace instead of thousands of tiny ones inside the loop.
+    def step(s, u):
+        s = jnp.where(s, u >= t_b, u < t_g)
+        return s, s
+
+    end, gates = jax.lax.scan(step, jnp.concatenate(state), u_gate)
+    state = (end[:n], end[n:])
+    su, sp = gates[:, :n], gates[:, n:]
+    ups = su & (u_up < arrs["t_q_up"])
+    tij = sp & (u_dd < arrs["t_qij"])
+    tji = sp & (
+        (u_dd < arrs["t_e"])
+        | ((u_dd >= arrs["t_qij"]) & (u_dd < arrs["t_mid"]))
+    )
+    # (R, n, n) assembly: one vectorized gather.  Entry (i, j) picks its
+    # unordered pair's tau_ij lane (upper triangle), tau_ji lane (lower,
+    # offset by m) or the constant-1 diagonal lane — an XLA CPU scatter
+    # here is ~10x slower than this gather.
+    cat = jnp.concatenate([tij, tji, jnp.ones((rounds, 1), bool)], axis=1)
+    dds = (
+        jnp.take(cat, jnp.asarray(arrs["pair_lane"]), axis=1)
+        .reshape(rounds, n, n)
+        .astype(jnp.float32)
+    )
+    return ups.astype(jnp.float32), dds, state
+
+
+# steady-state entry (MarkovChannel blocks after the first): the caller
+# carries the chain state across calls
+_ge_scan = partial(jax.jit, static_argnames=("rounds", "n"))(_ge_core)
+
+
+@partial(jax.jit, static_argnames=("rounds", "n"))
+def _ge_scan_stationary(arrs, key, *, rounds: int, n: int):
+    """One-shot entry: draw the initial gates from the stationary law and
+    run the trace, all inside a single compiled program (eager init-state
+    dispatches would cost a noticeable fraction of the whole pass)."""
+    k1, k2, k_scan = jax.random.split(key, 3)
+    su = jax.random.uniform(k1, arrs["pi_up"].shape) < arrs["pi_up"]
+    sp = jax.random.uniform(k2, arrs["pi_dd"].shape) < arrs["pi_dd"]
+    return _ge_core(arrs, (su, sp), k_scan, rounds=rounds, n=n)
+
+
+def _device_arrays(params: GEParams) -> dict:
+    """Integer-threshold device operands for ``_ge_scan`` (cached on the
+    params instance: rebuilding them per call would cost host->device
+    transfers comparable to the sampling pass itself)."""
+    cached = getattr(params, "_device_arrays_cache", None)
+    if cached is not None:
+        return cached
+    q_up, qij, qji, e_c, iu, ju = _conditionals(params)
+    n, m = params.n, iu.shape[0]
+    lattice = lambda p: np.rint(np.clip(p, 0.0, 1.0) * _LATTICE).astype(np.int64)
+    thresh = lambda p: jnp.asarray(lattice(p), jnp.uint16)
+    pair_lane = np.full((n, n), 2 * m, np.int32)  # diagonal -> constant-1 lane
+    pair_lane[iu, ju] = np.arange(m)
+    pair_lane[ju, iu] = m + np.arange(m)
+    # upper bound of the only-ji interval [t_qij, t_qij + t_qji - t_e);
+    # summed on host (int64) — it can exceed the 15-bit lattice by the
+    # rounding slack, which uint16 still holds exactly
+    t_mid = lattice(qij) + lattice(qji) - lattice(e_c)
+    arrs = dict(
+        t_g_up=thresh((1.0 - params.lam_up) * params.pi_up),
+        t_b_up=thresh((1.0 - params.lam_up) * (1.0 - params.pi_up)),
+        t_g_dd=thresh((1.0 - params.lam_dd) * params.pi_dd),
+        t_b_dd=thresh((1.0 - params.lam_dd) * (1.0 - params.pi_dd)),
+        t_q_up=thresh(q_up),
+        t_qij=thresh(qij),
+        t_qji=thresh(qji),
+        t_e=thresh(e_c),
+        t_mid=jnp.asarray(t_mid, jnp.uint16),
+        pair_lane=jnp.asarray(pair_lane.ravel()),
+        pi_up=jnp.asarray(params.pi_up, jnp.float32),
+        pi_dd=jnp.asarray(params.pi_dd, jnp.float32),
+    )
+    object.__setattr__(params, "_device_arrays_cache", arrs)
+    return arrs
+
+
+def channel_key(seed: int) -> jax.Array:
+    """PRNG key for the channel samplers.
+
+    Uses the ``rbg`` implementation: for this pure-simulation workload
+    its statistical quality is ample, and threefry bit generation alone
+    would cost more than the entire fused sampling pass on CPU.
+    """
+    return jax.random.key(seed, impl="rbg")
+
+
+def _stationary_state(params: GEParams, key) -> tuple[jax.Array, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    su = jax.random.uniform(k1, (params.n,)) < jnp.asarray(params.pi_up, jnp.float32)
+    m = params.pi_dd.shape[0]
+    sp = jax.random.uniform(k2, (m,)) < jnp.asarray(params.pi_dd, jnp.float32)
+    return su, sp
+
+
+def sample_ge_rounds(
+    params: GEParams, key: jax.Array, rounds: int
+) -> tuple[jax.Array, jax.Array]:
+    """Fused multi-round GE sampling: (R, n) uplinks and (R, n, n) D2D.
+
+    Same distribution as :func:`sample_ge_rounds_host`; the whole trace
+    is generated in one compiled scan (chains start stationary).  Any
+    PRNG key works; :func:`channel_key` is the fast choice.
+    """
+    ups, dds, _ = _ge_scan_stationary(
+        _device_arrays(params), key, rounds=rounds, n=params.n
+    )
+    return ups, dds
+
+
+# ---------------------------------------------------------------------------
+# ChannelProcess wrapper: block-wise scan generation, per-round service
+# ---------------------------------------------------------------------------
+
+
+class MarkovChannel:
+    """Serve a GE trace round-by-round, scan-generating ``block`` rounds
+    at a time on device and carrying the chain state across blocks."""
+
+    def __init__(self, params: GEParams, seed: int = 0, block: int = 256):
+        if block <= 0:
+            raise ValueError("block must be positive")
+        self.params = params
+        self.block = int(block)
+        self._key, k_init = jax.random.split(channel_key(seed))
+        self._arrs = _device_arrays(params)
+        self._state = _stationary_state(params, k_init)
+        self._start = 0  # first round of the current buffer
+        self._ups: Optional[np.ndarray] = None
+        self._dds: Optional[np.ndarray] = None
+
+    @property
+    def n(self) -> int:
+        return self.params.n
+
+    def _fill(self) -> None:
+        self._key, k = jax.random.split(self._key)
+        ups, dds, self._state = _ge_scan(
+            self._arrs, self._state, k, rounds=self.block, n=self.n
+        )
+        self._ups = np.asarray(ups, np.float64)
+        self._dds = np.asarray(dds, np.float64)
+
+    def tau_for_round(self, r: int) -> tuple[np.ndarray, np.ndarray]:
+        if r < self._start:
+            raise ValueError(f"MarkovChannel cannot rewind to round {r} (at {self._start})")
+        while self._ups is None or r >= self._start + self.block:
+            if self._ups is not None:
+                self._start += self.block
+            self._fill()
+        i = r - self._start
+        return self._ups[i], self._dds[i]
+
+    def model_for_round(self, r: int) -> LinkModel:
+        return self.params.model

@@ -1,4 +1,5 @@
 from .base import ARCH_IDS, CLI_ALIASES, INPUT_SHAPES, InputShape, get_arch, supported_shapes
+from .channels import CHANNEL_PRESETS, ChannelPreset, make_channel
 
 __all__ = [
     "ARCH_IDS",
@@ -7,4 +8,7 @@ __all__ = [
     "InputShape",
     "get_arch",
     "supported_shapes",
+    "CHANNEL_PRESETS",
+    "ChannelPreset",
+    "make_channel",
 ]

@@ -1,0 +1,101 @@
+"""Scenario presets for the dynamic channel subsystem.
+
+Each preset names a reproducible channel dynamic; :func:`make_channel`
+instantiates it for a given :class:`LinkModel` (static / markov — the
+model supplies the per-round marginals) or client count (mobility — the
+geometry *is* the model and drifts).  Used by
+``examples/train_colrel_cifar.py --channel`` and
+``benchmarks/channel_bench.py``; grep-able single source of truth for
+what "bursty" means across the repo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.channel import (
+    ChannelProcess,
+    MarkovChannel,
+    MobilityChannel,
+    StaticChannel,
+    gilbert_elliott,
+)
+from repro.core.connectivity import LinkModel
+
+__all__ = ["ChannelPreset", "CHANNEL_PRESETS", "make_channel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelPreset:
+    kind: str  # static | markov | mobility
+    # markov: gate memory (lag-1 autocorrelation); 0 = i.i.d. paper model
+    memory: float = 0.9
+    occupancy: Optional[float] = None
+    block: int = 256  # scan-generation block (rounds per device pass)
+    # mobility: geometry refresh cadence / client speed / roam half-width
+    epoch: int = 20
+    speed: float = 4.0
+    area: float = 300.0
+    d2d_mode: str = "intermittent"
+
+
+CHANNEL_PRESETS = {
+    # the paper's i.i.d. channel, as a ChannelProcess
+    "static": ChannelPreset(kind="static"),
+    # GE chains fitted to the model's marginals, i.i.d. gates — sanity
+    # preset: distribution-identical to "static"
+    "markov_iid": ChannelPreset(kind="markov", memory=0.0),
+    # mmWave-style bursty blockage: ~10-round expected blockage bursts
+    "markov": ChannelPreset(kind="markov", memory=0.9),
+    # heavy blockage: ~30-round bursts, same marginals
+    "markov_heavy": ChannelPreset(kind="markov", memory=0.97),
+    # pedestrian-speed waypoint mobility, geometry refresh every 20 rounds
+    "mobility": ChannelPreset(kind="mobility", epoch=20, speed=4.0),
+    # vehicular-speed drift: topology turnover within ~a re-opt window
+    "mobility_fast": ChannelPreset(kind="mobility", epoch=10, speed=15.0),
+}
+
+
+def make_channel(
+    preset: "str | ChannelPreset",
+    model: Optional[LinkModel] = None,
+    *,
+    n: Optional[int] = None,
+    seed: int = 0,
+) -> ChannelProcess:
+    """Instantiate a preset.
+
+    ``static`` / ``markov*`` need ``model`` (the marginals to preserve);
+    ``mobility*`` needs ``n`` (or infers it from ``model``).
+    """
+    if isinstance(preset, str):
+        try:
+            preset = CHANNEL_PRESETS[preset]
+        except KeyError:
+            raise KeyError(
+                f"unknown channel preset {preset!r}; have {sorted(CHANNEL_PRESETS)}"
+            ) from None
+    if preset.kind == "static":
+        if model is None:
+            raise ValueError("static channel needs a LinkModel")
+        return StaticChannel(model, seed=seed)
+    if preset.kind == "markov":
+        if model is None:
+            raise ValueError("markov channel needs a LinkModel")
+        params = gilbert_elliott(model, memory=preset.memory, occupancy=preset.occupancy)
+        return MarkovChannel(params, seed=seed, block=preset.block)
+    if preset.kind == "mobility":
+        if n is None:
+            if model is None:
+                raise ValueError("mobility channel needs n (or a model for its n)")
+            n = model.n
+        return MobilityChannel(
+            n,
+            area=preset.area,
+            speed=preset.speed,
+            epoch=preset.epoch,
+            seed=seed,
+            d2d_mode=preset.d2d_mode,
+        )
+    raise ValueError(f"unknown channel kind {preset.kind!r}")

@@ -142,12 +142,36 @@ def sample_round(
 def sample_rounds(
     model: LinkModel, rng: np.random.Generator, rounds: int
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Vectorized multi-round sampling: (R, n) uplinks and (R, n, n) D2D."""
-    ups = np.empty((rounds, model.n))
-    dds = np.empty((rounds, model.n, model.n))
-    for r in range(rounds):
-        ups[r], dds[r] = sample_round(model, rng)
+    """Vectorized multi-round sampling: (R, n) uplinks and (R, n, n) D2D.
+
+    Batched RNG — every uniform for the whole experiment is drawn in one
+    call, no per-round host loop.  Distribution-identical to stacking
+    :func:`sample_round` ``rounds`` times (the per-round law is the same
+    coupling); the draw *order* differs, so sequences from the two APIs
+    are not bit-equal for the same generator state (cross-checked
+    statistically in ``tests/test_channel.py``).
+    """
+    n = model.n
+    ups = (rng.random((rounds, n)) < model.p).astype(np.float64)
+    iu, ju = np.triu_indices(n, k=1)
+    u = rng.random((rounds, iu.shape[0]))  # one uniform per pair per round
+    pij, pji, e = model.P[iu, ju], model.P[ju, iu], model.E[iu, ju]
+    both = u < e
+    only_ij = (u >= e) & (u < pij)
+    only_ji = (u >= pij) & (u < pij + pji - e)
+    dds = np.zeros((rounds, n, n))
+    dds[:, iu, ju] = both | only_ij
+    dds[:, ju, iu] = both | only_ji
+    dds += np.eye(n)[None]
     return ups, dds
+
+
+# The one canonical contraction behind every "effective weights" variant:
+# w_j = sum_i tau_up[i] * A[i, j] * tau_dd[j, i].  The numpy function below
+# and its device twin ``repro.core.relay.effective_weights`` both evaluate
+# exactly this spec (property-tested against each other); ``repro.core``
+# exports this one as the canonical name.
+EFFECTIVE_WEIGHTS_EINSUM = "i,ij,ji->j"
 
 
 def effective_weights(
@@ -165,4 +189,4 @@ def effective_weights(
     reproduces the paper-faithful PS trajectory exactly for the same draws.
     """
     # w_j = sum_i tau_up[i] * A[i, j] * tau_dd[j, i]
-    return np.einsum("i,ij,ji->j", tau_up, np.asarray(A), tau_dd)
+    return np.einsum(EFFECTIVE_WEIGHTS_EINSUM, tau_up, np.asarray(A), tau_dd)

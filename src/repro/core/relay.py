@@ -19,6 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import connectivity
+
 __all__ = [
     "mixing_matrix",
     "relay_mix",
@@ -52,9 +54,10 @@ def ps_aggregate(updates_tilde: jax.Array, tau_up: jax.Array) -> jax.Array:
 
 
 def effective_weights(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array) -> jax.Array:
-    """w_j = sum_i tau_i tau_ji alpha_ij (JAX twin of
-    connectivity.effective_weights)."""
-    return jnp.einsum("i,ij,ji->j", tau_up, A, tau_dd)
+    """w_j = sum_i tau_i tau_ji alpha_ij — device twin of the canonical
+    ``repro.core.effective_weights`` (numpy), delegating to the single
+    shared contraction spec so the two can never drift."""
+    return jnp.einsum(connectivity.EFFECTIVE_WEIGHTS_EINSUM, tau_up, A, tau_dd)
 
 
 def fused_round_delta(updates: jax.Array, w: jax.Array) -> jax.Array:

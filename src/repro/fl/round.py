@@ -127,6 +127,14 @@ def make_round_fn(
         return _local_sgd(loss_fn, client_opt, params, client_batches, unroll=rc.unroll)
 
     def round_fn(params, server_state, batches, tau_up, tau_dd, A):
+        # Realized scalar weights this round (for COLREL: the exact fused
+        # collapse w_j = sum_i tau_i tau_ji alpha_ij, scaled 1/n).  Used by
+        # the scalar-weight execution branches below and logged as
+        # ``weight_sum`` — under the unbiasedness condition (5) its
+        # expectation is 1, so its round-to-round dispersion is the
+        # realized counterpart of the variance proxy S that COPT-alpha
+        # (and the adaptive re-optimization schedule) minimize.
+        w_scalar = _strategy_weights(rc, tau_up, tau_dd, A)
         if rc.mode == "per_client":
             spmd = spmd_axis_name(rc.spmd_axes)
             deltas, losses = jax.vmap(
@@ -147,11 +155,7 @@ def make_round_fn(
                     # products + one (d,) all-reduce).  An opaque pallas
                     # call has no partitioning rule — it would be
                     # replicated, gathering the full stack onto every chip.
-                    w = relay_ops.effective_weights(
-                        A.astype(jnp.float32), tau_up.astype(jnp.float32),
-                        tau_dd.astype(jnp.float32),
-                    )
-                    gflat = (w @ stack.astype(jnp.float32)) / rc.n_clients
+                    gflat = w_scalar @ stack.astype(jnp.float32)
                 else:
                     gflat = kernel_ops.fused_aggregate(
                         A, tau_up, tau_dd, stack, block_d=rc.fused_block_d
@@ -169,12 +173,13 @@ def make_round_fn(
                     deltas,
                 )
             else:
-                w = _strategy_weights(rc, tau_up, tau_dd, A)
-                gdelta = jax.tree.map(lambda D: jnp.tensordot(w, D, axes=1), deltas)
+                gdelta = jax.tree.map(
+                    lambda D: jnp.tensordot(w_scalar, D, axes=1), deltas
+                )
             mean_loss = jnp.mean(losses)
 
         elif rc.mode == "client_sequential":
-            w = _strategy_weights(rc, tau_up, tau_dd, A)
+            w = w_scalar
 
             def body(carry, inp):
                 acc, loss_acc = carry
@@ -193,7 +198,7 @@ def make_round_fn(
         elif rc.mode == "weighted_grad":
             # T = 1 collapse: one backward pass over all clients' batches with
             # per-client loss weights — ColRel as weighted data parallelism.
-            w = _strategy_weights(rc, tau_up, tau_dd, A)
+            w = w_scalar
             spmd = spmd_axis_name(rc.spmd_axes)
 
             def weighted_loss(p):
@@ -215,7 +220,7 @@ def make_round_fn(
             # lane factor), fold the client dim into the batch and weight
             # each SEQUENCE by w_{client(seq)} / B inside the loss.  Same
             # gradient as weighted_grad; one flat data-parallel backward.
-            w = _strategy_weights(rc, tau_up, tau_dd, A)
+            w = w_scalar
             n_total = jax.tree.leaves(batches)[0].shape[0]
             B_per = n_total // rc.n_clients
             seq_w = jnp.repeat(w, B_per) / B_per
@@ -246,6 +251,7 @@ def make_round_fn(
             "loss": mean_loss,
             "delta_norm": global_norm(gdelta),
             "participation": jnp.sum(tau_up.astype(jnp.float32)),
+            "weight_sum": jnp.sum(w_scalar),
         }
         return new_params, server_state, metrics
 

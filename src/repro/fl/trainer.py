@@ -4,6 +4,15 @@ batches, invokes the compiled round function, tracks metrics, evaluates.
 This is the entry point the paper-reproduction experiments and the
 examples use on CPU; the production launch path (``repro/launch``) wraps
 the same round function in pjit with mesh shardings.
+
+Connectivity comes from a :class:`~repro.channel.ChannelProcess` — the
+paper's i.i.d. model (the default, built from ``link_model``), bursty
+Gilbert–Elliott chains, or waypoint mobility.  With an
+:class:`~repro.channel.AdaptiveWeightSchedule` attached, the trainer no
+longer assumes oracle link knowledge: it estimates ``(p, P, E)`` online
+from the realized taus and re-runs COPT-alpha every K rounds, swapping
+the fresh alpha into the (traced, so recompile-free) ``A`` argument of
+the compiled round.
 """
 
 from __future__ import annotations
@@ -16,7 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LinkModel, sample_round
+from repro.channel.base import ChannelProcess, StaticChannel
+from repro.channel.schedule import AdaptiveWeightSchedule
+from repro.core import LinkModel, variance_S
 from repro.core.aggregation import Aggregation
 from repro.data.pipeline import ClientDataset
 from repro.fl.round import RoundConfig, make_round_fn
@@ -32,6 +43,14 @@ class TrainLog:
     eval_rounds: List[int] = dataclasses.field(default_factory=list)
     eval_metrics: List[Dict[str, float]] = dataclasses.field(default_factory=list)
     participation: List[float] = dataclasses.field(default_factory=list)
+    # realized sum of scalar aggregation weights (E = 1 when unbiased);
+    # its dispersion is the realized counterpart of the variance proxy S
+    weight_sums: List[float] = dataclasses.field(default_factory=list)
+    # adaptive re-optimization events (empty without a schedule)
+    reopt_rounds: List[int] = dataclasses.field(default_factory=list)
+    est_p_err: List[float] = dataclasses.field(default_factory=list)
+    S_est: List[float] = dataclasses.field(default_factory=list)
+    S_true: List[float] = dataclasses.field(default_factory=list)
 
     def to_dict(self):
         return dataclasses.asdict(self)
@@ -44,7 +63,7 @@ class FLTrainer:
         self,
         loss_fn: Callable,
         init_params: Params,
-        link_model: LinkModel,
+        link_model: Optional[LinkModel],
         A: np.ndarray,
         clients: Sequence[ClientDataset],
         client_opt: Optimizer,
@@ -56,13 +75,22 @@ class FLTrainer:
         use_fused_kernel: bool = False,
         seed: int = 0,
         eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None,
+        channel: Optional[ChannelProcess] = None,
+        adaptive: Optional[AdaptiveWeightSchedule] = None,
     ):
-        n = link_model.n
+        if channel is None:
+            if link_model is None:
+                raise ValueError("provide link_model or channel")
+            channel = StaticChannel(link_model, seed=seed)
+        self.channel = channel
+        self.adaptive = adaptive
+        n = channel.n
+        if link_model is not None and link_model.n != n:
+            raise ValueError(f"link_model.n={link_model.n} != channel.n={n}")
         assert len(clients) == n, (len(clients), n)
-        self.link_model = link_model
+        self.link_model = link_model if link_model is not None else channel.model_for_round(0)
         self.A = jnp.asarray(A, jnp.float32)
         self.clients = list(clients)
-        self.rng = np.random.default_rng(seed)
         self.params = init_params
         self.eval_fn = eval_fn
         rc = RoundConfig(
@@ -89,8 +117,9 @@ class FLTrainer:
         return out
 
     def run(self, rounds: int, *, eval_every: int = 0, verbose: bool = False) -> TrainLog:
-        for r in range(rounds):
-            tau_up, tau_dd = sample_round(self.link_model, self.rng)
+        start = self.log.rounds[-1] + 1 if self.log.rounds else 0
+        for r in range(start, start + rounds):
+            tau_up, tau_dd = self.channel.tau_for_round(r)
             batches = self._stack_batches()
             self.params, self.server_state, metrics = self._round_fn(
                 self.params,
@@ -103,6 +132,26 @@ class FLTrainer:
             self.log.rounds.append(r)
             self.log.loss.append(float(metrics["loss"]))
             self.log.participation.append(float(metrics["participation"]))
+            self.log.weight_sums.append(float(metrics["weight_sum"]))
+            if self.adaptive is not None:
+                A_new = self.adaptive.step(r, tau_up, tau_dd)
+                if A_new is not None:
+                    self.A = jnp.asarray(A_new, jnp.float32)
+                    true_m = self.channel.model_for_round(r)
+                    info = self.adaptive.events[-1]
+                    self.log.reopt_rounds.append(r)
+                    self.log.est_p_err.append(
+                        self.adaptive.estimator.errors(true_m)["p"]
+                    )
+                    self.log.S_est.append(float(info["S_est"]))
+                    self.log.S_true.append(float(variance_S(true_m, A_new)))
+                    if verbose:
+                        print(
+                            f"  round {r+1:4d}  re-opt alpha: "
+                            f"S_est={info['S_est']:.3f} "
+                            f"S_true={self.log.S_true[-1]:.3f} "
+                            f"p_err={self.log.est_p_err[-1]:.3f}"
+                        )
             if eval_every and (r + 1) % eval_every == 0 and self.eval_fn is not None:
                 em = self.eval_fn(self.params)
                 self.log.eval_rounds.append(r)

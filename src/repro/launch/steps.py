@@ -123,7 +123,12 @@ def build_step(
         bsh = shard_rules.train_batch_shardings(mesh, mode, specs["batches"])
         rep = NamedSharding(mesh, P())
         in_sh = (psh, ssh, bsh, rep, rep, rep)
-        metrics_sh = {"loss": rep, "delta_norm": rep, "participation": rep}
+        metrics_sh = {
+            "loss": rep,
+            "delta_norm": rep,
+            "participation": rep,
+            "weight_sum": rep,
+        }
         out_sh = (psh, ssh, metrics_sh)
         lower_args = (
             specs["params"],

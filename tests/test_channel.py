@@ -1,0 +1,264 @@
+"""Dynamic channel subsystem: Gilbert–Elliott statistics, scan-vs-host
+distribution identity, online estimation, adaptive alpha re-optimization,
+and the vectorized static sampler against the per-round loop reference."""
+
+import numpy as np
+import pytest
+
+from repro.channel import (
+    AdaptiveConfig,
+    AdaptiveWeightSchedule,
+    LinkEstimator,
+    MarkovChannel,
+    MobilityChannel,
+    StaticChannel,
+    channel_key,
+    gilbert_elliott,
+    sample_ge_rounds,
+    sample_ge_rounds_host,
+)
+from repro.core import (
+    LinkModel,
+    is_unbiased,
+    optimize_weights,
+    sample_round,
+    sample_rounds,
+    topology,
+    unbiasedness_residual,
+)
+
+MODEL = topology.fully_connected(6, 0.6, p_c=0.5, rho=0.5)
+OFF = ~np.eye(6, dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# Gilbert–Elliott chains
+# ---------------------------------------------------------------------------
+
+
+def test_ge_feasibility_and_validation():
+    ge = gilbert_elliott(MODEL, memory=0.9)
+    # tightest gates: uplink occupancy equals the marginal
+    assert np.allclose(ge.pi_up, MODEL.p)
+    # pair occupancy obeys the Fréchet floor
+    iu, ju = ge.pair_indices()
+    floor = np.maximum(
+        np.maximum(MODEL.P[iu, ju], MODEL.P[ju, iu]),
+        MODEL.P[iu, ju] + MODEL.P[ju, iu] - MODEL.E[iu, ju],
+    )
+    assert np.all(ge.pi_dd >= floor - 1e-12)
+    with pytest.raises(ValueError):
+        gilbert_elliott(MODEL, memory=1.0)
+    with pytest.raises(ValueError):
+        gilbert_elliott(MODEL, memory=0.5, occupancy=0.0)
+
+
+def test_ge_stationary_occupancy_matches_marginals():
+    """Empirical stationary occupancy of the scanned GE trace matches the
+    target (p, P, E) within ESS-corrected tolerance."""
+    lam, R = 0.8, 20000
+    ge = gilbert_elliott(MODEL, memory=lam)
+    ups, dds = sample_ge_rounds(ge, channel_key(0), R)
+    ups, dds = np.asarray(ups, np.float64), np.asarray(dds, np.float64)
+    ess = (1 - lam) / (1 + lam)
+    # per-link tolerance: 5 sigma of the autocorrelated mean
+    tol_up = 5 * np.sqrt(MODEL.p * (1 - MODEL.p) / (R * ess))
+    assert np.all(np.abs(ups.mean(0) - MODEL.p) < tol_up + 1e-9)
+    tol_dd = 5 * np.sqrt(np.maximum(MODEL.P * (1 - MODEL.P), 1e-12) / (R * ess))
+    assert np.all(np.abs((dds.mean(0) - MODEL.P))[OFF] < (tol_dd + 1e-9)[OFF])
+    joint = (dds * np.swapaxes(dds, 1, 2)).mean(0)
+    tol_e = 5 * np.sqrt(np.maximum(MODEL.E * (1 - MODEL.E), 1e-12) / (R * ess))
+    assert np.all(np.abs(joint - MODEL.E)[OFF] < (tol_e + 1e-9)[OFF])
+    assert np.all(dds[:, np.arange(6), np.arange(6)] == 1.0)
+
+
+def test_ge_burstiness_lag1():
+    """Lag-1 autocorrelation of the taus matches the analytic value, and
+    memory=0 really is the i.i.d. channel (no temporal correlation)."""
+    R = 20000
+    for lam in (0.0, 0.9):
+        ge = gilbert_elliott(MODEL, memory=lam)
+        ups, _ = sample_ge_rounds(ge, channel_key(1), R)
+        ups = np.asarray(ups, np.float64)
+        want = ge.lag1_uplink()[0]
+        got = np.mean(
+            [np.corrcoef(ups[:-1, i], ups[1:, i])[0, 1] for i in range(6)]
+        )
+        assert abs(got - want) < 0.05, (lam, got, want)
+    assert gilbert_elliott(MODEL, memory=0.0).lag1_uplink()[0] == 0.0
+
+
+def test_ge_host_and_scan_same_distribution():
+    """The numpy per-round loop and the fused scan draw from the same law
+    (grand means within 6 sigma of each other)."""
+    lam, R = 0.7, 8000
+    ge = gilbert_elliott(MODEL, memory=lam)
+    ups_h, dds_h = sample_ge_rounds_host(ge, np.random.default_rng(0), R)
+    ups_s, dds_s = sample_ge_rounds(ge, channel_key(2), R)
+    ups_s, dds_s = np.asarray(ups_s, np.float64), np.asarray(dds_s, np.float64)
+    ess = (1 - lam) / (1 + lam)
+    n_up = 6 * R * ess
+    sd = np.sqrt(2 * 0.25 / n_up)  # two-sample, p(1-p) <= 1/4
+    assert abs(ups_h.mean() - ups_s.mean()) < 6 * sd
+    n_dd = 15 * R * ess  # unordered pairs
+    sd = np.sqrt(2 * 0.25 / n_dd)
+    assert abs(dds_h.mean(0)[OFF].mean() - dds_s.mean(0)[OFF].mean()) < 6 * sd
+    jh = (dds_h * np.swapaxes(dds_h, 1, 2)).mean(0)[OFF].mean()
+    js = (dds_s * np.swapaxes(dds_s, 1, 2)).mean(0)[OFF].mean()
+    assert abs(jh - js) < 6 * sd
+
+
+def test_markov_channel_blocks_are_consistent():
+    """Block-wise service equals one continuous trace (state carried)."""
+    ge = gilbert_elliott(MODEL, memory=0.9)
+    ch = MarkovChannel(ge, seed=0, block=32)
+    taus = [ch.tau_for_round(r) for r in range(100)]
+    assert all(t[0].shape == (6,) and t[1].shape == (6, 6) for t in taus)
+    with pytest.raises(ValueError):
+        ch.tau_for_round(3)  # cannot rewind
+    # burstiness survives block boundaries: long-run mean is still p
+    ups = np.array([t[0] for t in taus])
+    assert abs(ups.mean() - 0.6) < 0.15
+
+
+# ---------------------------------------------------------------------------
+# Static + mobility channels
+# ---------------------------------------------------------------------------
+
+
+def test_static_channel_matches_paper_law(rng):
+    ch = StaticChannel(MODEL, seed=0)
+    R = 4000
+    ups = np.array([ch.tau_for_round(r)[0] for r in range(R)])
+    assert np.all(np.abs(ups.mean(0) - MODEL.p) < 5 * np.sqrt(0.25 / R) + 1e-9)
+    assert ch.model_for_round(7) is MODEL
+
+
+def test_mobility_channel_drifts():
+    ch = MobilityChannel(8, area=250.0, speed=20.0, epoch=5, seed=0)
+    for r in range(20):
+        tu, td = ch.tau_for_round(r)
+        assert tu.shape == (8,) and td.shape == (8, 8)
+    m0, m3 = ch.model_for_round(0), ch.model_for_round(19)
+    assert isinstance(m0, LinkModel) and isinstance(m3, LinkModel)
+    # fast movement must actually change the uplink marginals
+    assert np.abs(m0.p - m3.p).max() > 1e-3
+    with pytest.raises(ValueError):
+        ch.model_for_round(500)  # future epoch
+
+
+# ---------------------------------------------------------------------------
+# Estimation + adaptive re-optimization
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_converges_on_long_trace(rng):
+    est = LinkEstimator(6)
+    for _ in range(6000):
+        est.update(*sample_round(MODEL, rng))
+    assert np.abs(est.p_hat - MODEL.p).max() < 0.04
+    assert np.abs((est.P_hat - MODEL.P)[OFF]).max() < 0.04
+    assert np.abs((est.E_hat - MODEL.E)[OFF]).max() < 0.04
+    em = est.estimated_model()  # projection must be LinkModel-feasible
+    assert isinstance(em, LinkModel)
+    errs = est.errors(MODEL)
+    assert max(errs.values()) < 0.05
+
+
+def test_estimator_converges_on_bursty_trace():
+    """Same marginals under bursty GE: the estimator must still find them."""
+    ge = gilbert_elliott(MODEL, memory=0.9)
+    est = LinkEstimator(6)
+    ups, dds = sample_ge_rounds(ge, channel_key(3), 20000)
+    ups, dds = np.asarray(ups, np.float64), np.asarray(dds, np.float64)
+    for r in range(ups.shape[0]):
+        est.update(ups[r], dds[r])
+    assert np.abs(est.p_hat - MODEL.p).max() < 0.06
+    assert np.abs((est.P_hat - MODEL.P)[OFF]).max() < 0.06
+
+
+def test_estimator_decay_tracks_drift(rng):
+    """EWMA estimator follows a mid-stream change of the true model."""
+    m2 = topology.fully_connected(6, 0.2, p_c=0.5, rho=0.5)
+    est = LinkEstimator(6, decay=0.98)
+    for _ in range(2000):
+        est.update(*sample_round(MODEL, rng))
+    for _ in range(2000):
+        est.update(*sample_round(m2, rng))
+    assert np.abs(est.p_hat - m2.p).max() < 0.1  # forgot the old p=0.6
+
+
+def test_adaptive_alpha_unbiased_after_reopt(rng):
+    """Alpha re-optimized from estimated stats satisfies the unbiasedness
+    condition exactly under the estimated model and approximately under
+    the true one (shrinking with estimation error)."""
+    sched = AdaptiveWeightSchedule(6, AdaptiveConfig(every=500, warmup=100))
+    A = None
+    for r in range(2000):
+        out = sched.step(r, *sample_round(MODEL, rng))
+        if out is not None:
+            A = out
+    assert A is not None and len(sched.events) == 4
+    assert is_unbiased(sched.estimator.estimated_model(), A, atol=1e-6)
+    resid = np.abs(unbiasedness_residual(MODEL, A)).max()
+    assert resid < 0.1, resid
+    # and the adaptive S is in the same ballpark as the oracle optimum
+    oracle = optimize_weights(MODEL, sweeps=10, fine_tune_sweeps=10)
+    assert sched.events[-1]["S_est"] < 2.0 * oracle.S + 1.0
+
+
+def test_adaptive_schedule_cadence(rng):
+    sched = AdaptiveWeightSchedule(6, AdaptiveConfig(every=10, warmup=25))
+    fired = [r for r in range(60) if sched.step(r, *sample_round(MODEL, rng)) is not None]
+    assert fired == [29, 39, 49, 59]  # warmup respected, then every K
+
+
+# ---------------------------------------------------------------------------
+# Satellite: vectorized static sample_rounds vs the per-round loop
+# ---------------------------------------------------------------------------
+
+
+def _sample_rounds_loop(model, rng, rounds):
+    """The old host-side per-round reference implementation."""
+    ups = np.empty((rounds, model.n))
+    dds = np.empty((rounds, model.n, model.n))
+    for r in range(rounds):
+        ups[r], dds[r] = sample_round(model, rng)
+    return ups, dds
+
+
+def test_sample_rounds_matches_loop_reference(rng):
+    R = 4000
+    ups_v, dds_v = sample_rounds(MODEL, np.random.default_rng(1), R)
+    ups_l, dds_l = _sample_rounds_loop(MODEL, np.random.default_rng(2), R)
+    assert ups_v.shape == ups_l.shape and dds_v.shape == dds_l.shape
+    sd = np.sqrt(2 * 0.25 / (6 * R))
+    assert abs(ups_v.mean() - ups_l.mean()) < 6 * sd
+    sd = np.sqrt(2 * 0.25 / (15 * R))
+    assert abs(dds_v.mean(0)[OFF].mean() - dds_l.mean(0)[OFF].mean()) < 6 * sd
+    jv = (dds_v * np.swapaxes(dds_v, 1, 2)).mean(0)[OFF].mean()
+    jl = (dds_l * np.swapaxes(dds_l, 1, 2)).mean(0)[OFF].mean()
+    assert abs(jv - jl) < 6 * sd
+    assert np.all(dds_v[:, np.arange(6), np.arange(6)] == 1.0)
+
+
+def test_effective_weights_numpy_jax_agree(rng):
+    """Satellite: the canonical numpy effective_weights and its device twin
+    evaluate the identical contraction."""
+    import jax.numpy as jnp
+
+    from repro.core import effective_weights
+    from repro.core.relay import effective_weights as effective_weights_jax
+
+    for _ in range(10):
+        A = rng.random((6, 6))
+        tu, td = sample_round(MODEL, rng)
+        w_np = effective_weights(A, tu, td)
+        w_jx = np.asarray(
+            effective_weights_jax(
+                jnp.asarray(A, jnp.float32),
+                jnp.asarray(tu, jnp.float32),
+                jnp.asarray(td, jnp.float32),
+            )
+        )
+        np.testing.assert_allclose(w_np, w_jx, rtol=1e-5, atol=1e-5)

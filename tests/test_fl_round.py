@@ -88,6 +88,35 @@ def test_optimized_weights_reduce_round_variance():
     assert var_opt < 0.5 * var_init, (var_opt / R, var_init / R)
 
 
+def test_trainer_with_markov_channel_and_adaptive_alpha():
+    """End-to-end: bursty channel + online estimation + periodic re-opt.
+    The round function's A input is traced, so swapping alpha mid-run must
+    not recompile or corrupt the trajectory; all adaptive logs populate."""
+    from repro.channel import (
+        AdaptiveConfig,
+        AdaptiveWeightSchedule,
+        MarkovChannel,
+        gilbert_elliott,
+    )
+
+    ch = MarkovChannel(gilbert_elliott(MODEL, memory=0.8), seed=1, block=16)
+    sched = AdaptiveWeightSchedule(
+        10, AdaptiveConfig(every=10, warmup=5, sweeps=3, fine_tune_sweeps=3)
+    )
+    t = FLTrainer(loss_fn, {"x": jnp.zeros(16)}, MODEL, fedavg_weights(10),
+                  make_clients(7), sgd(0.02), sgd_momentum(1.0, beta=0.0),
+                  local_steps=2, aggregation=Aggregation.COLREL, seed=0,
+                  channel=ch, adaptive=sched)
+    t.run(30)
+    assert len(t.log.loss) == 30 and np.isfinite(t.log.loss).all()
+    assert t.log.reopt_rounds == [9, 19, 29]
+    assert len(t.log.S_est) == len(t.log.S_true) == len(t.log.est_p_err) == 3
+    assert len(t.log.weight_sums) == 30
+    # resumed run() continues the round counter and the channel stream
+    t.run(5)
+    assert t.log.rounds[-1] == 34
+
+
 def test_weighted_flat_equals_weighted_grad():
     """The flat ColRel round (per-sequence loss weights) produces the same
     global update as the per-client-vmap weighted_grad round."""
