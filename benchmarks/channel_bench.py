@@ -37,7 +37,7 @@ from repro.channel import (
     sample_ge_rounds,
     sample_ge_rounds_host,
 )
-from repro.core import Aggregation, fedavg_weights, topology
+from repro.core import fedavg_weights, topology
 from repro.data import quadratic_problem
 from repro.data.pipeline import ClientDataset
 from repro.fl import FLTrainer
@@ -152,7 +152,7 @@ def _run_arm(model, channel, A, agg, adaptive, *, rounds, local_steps=2, seed=0)
                                      batch_size=1, seed=seed + i))
     t = FLTrainer(loss_fn, {"x": jnp.zeros(16)}, model, A, clients,
                   sgd(0.02), sgd_momentum(1.0, beta=0.0), local_steps=local_steps,
-                  aggregation=agg, seed=seed, channel=channel, adaptive=adaptive)
+                  strategy=agg, seed=seed, channel=channel, adaptive=adaptive)
     t.run(rounds)
     tail = rounds // 3
     final_loss = float(np.mean(t.log.loss[-tail:]))
@@ -172,7 +172,7 @@ def bench_channel_adaptive() -> List[Row]:
     t0 = time.perf_counter()
     loss_f, wmse_f, _ = _run_arm(
         model, bursty_channel(), fedavg_weights(model.n),
-        Aggregation.FEDAVG_BLIND, None, rounds=rounds)
+        "fedavg_blind", None, rounds=rounds)
     us_f = (time.perf_counter() - t0) * 1e6
 
     t0 = time.perf_counter()
@@ -183,7 +183,7 @@ def bench_channel_adaptive() -> List[Row]:
     )
     loss_a, wmse_a, tr = _run_arm(
         model, bursty_channel(), fedavg_weights(model.n),
-        Aggregation.COLREL, adaptive, rounds=rounds)
+        "colrel", adaptive, rounds=rounds)
     us_a = (time.perf_counter() - t0) * 1e6
 
     assert loss_a < loss_f, (

@@ -16,13 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import colrel_paper
-from repro.core import Aggregation, LinkModel, fedavg_weights, optimize_weights
-from repro.data import synthetic_cifar, partition_iid, partition_sort_and_partition
-from repro.data.pipeline import make_federated_clients
-from repro.fl import FLTrainer
-from repro.models import build
-from repro.optim import sgd, sgd_momentum
+from repro.core import LinkModel, fedavg_weights, optimize_weights
+from repro.fl import ExperimentSpec, build_experiment
 
 BENCH_ROUNDS = int(os.environ.get("BENCH_ROUNDS", "6"))
 Row = Tuple[str, float, str]
@@ -41,61 +36,48 @@ def timed(f, *args, repeat: int = 1, **kw):
 
 def run_cnn_fl(
     link_model: LinkModel,
-    aggregation: Aggregation,
+    strategy: str,
     A: np.ndarray,
     *,
     non_iid_s: int | None = None,
     rounds: int = BENCH_ROUNDS,
     seed: int = 0,
 ) -> Dict[str, float]:
-    """One federated CNN training run; returns final loss/accuracy."""
-    setup = colrel_paper.reduced(batch_size=16)
-    bundle = build(setup.cnn)
-    images, labels = synthetic_cifar(n=4000, seed=1)
-    ev_images, ev_labels = synthetic_cifar(n=1000, seed=2)
-    n = link_model.n
-    if non_iid_s:
-        parts = partition_sort_and_partition(labels, n, s=non_iid_s, seed=seed)
-    else:
-        parts = partition_iid(len(labels), n, seed=seed)
-    clients = make_federated_clients(
-        {"images": images, "labels": labels}, parts, setup.batch_size, seed=seed
-    )
+    """One federated CNN training run; returns final loss/accuracy.
 
-    @jax.jit
-    def eval_fn(params):
-        _, m = bundle.loss_fn(params, {"images": ev_images, "labels": ev_labels})
-        return m
-
-    trainer = FLTrainer(
-        bundle.loss_fn,
-        bundle.init(jax.random.PRNGKey(seed)),
-        link_model,
-        A,
-        clients,
-        sgd(setup.lr, weight_decay=setup.weight_decay),
-        sgd_momentum(1.0, beta=setup.server_momentum),
-        local_steps=setup.local_steps,
-        aggregation=aggregation,
+    Thin wrapper over the declarative ExperimentSpec — bench budgets
+    (reduced data / eval sizes, batch 16) are the only deviations from
+    the spec defaults."""
+    spec = ExperimentSpec(
+        model="cifar_cnn",
+        topology=link_model,
+        non_iid_s=non_iid_s or 0,
+        data_size=4000,
+        eval_size=1000,
+        batch_size=16,
+        strategy=strategy,
+        alpha=A,
+        rounds=rounds,
         seed=seed,
     )
-    trainer.run(rounds)
-    m = eval_fn(trainer.params)
+    exp = build_experiment(spec)
+    exp.run()
+    m = exp.trainer.eval_fn(exp.params)
     return {
         "loss": float(m["ce"]),
         "acc": float(m["acc"]),
-        "train_loss": trainer.log.loss[-1],
-        "mean_participation": float(np.mean(trainer.log.participation)),
+        "train_loss": exp.log.loss[-1],
+        "mean_participation": float(np.mean(exp.log.participation)),
     }
 
 
 def strategies_for(model: LinkModel):
-    """(label, aggregation, A) triples: ColRel + the paper's baselines."""
+    """(label, strategy name, A) triples: ColRel + the paper's baselines."""
     res = optimize_weights(model, sweeps=25, fine_tune_sweeps=25)
     eye = fedavg_weights(model.n)
     return [
-        ("colrel", Aggregation.COLREL, res.A),
-        ("fedavg_blind", Aggregation.FEDAVG_BLIND, eye),
-        ("fedavg_nonblind", Aggregation.FEDAVG_NONBLIND, eye),
-        ("fedavg_perfect", Aggregation.FEDAVG_PERFECT, eye),
+        ("colrel", "colrel", res.A),
+        ("fedavg_blind", "fedavg_blind", eye),
+        ("fedavg_nonblind", "fedavg_nonblind", eye),
+        ("fedavg_perfect", "fedavg_perfect", eye),
     ], res

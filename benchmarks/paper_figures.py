@@ -13,7 +13,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core import Aggregation, optimize_weights, fedavg_weights, variance_S
+from repro.core import optimize_weights, fedavg_weights, variance_S
 from repro.core import topology
 
 from .common import BENCH_ROUNDS, Row, run_cnn_fl, strategies_for
@@ -67,7 +67,7 @@ def bench_fig4_mmwave() -> List[Row]:
     for label, m in cases.items():
         res = optimize_weights(m, sweeps=25, fine_tune_sweeps=25)
         t0 = time.perf_counter()
-        out = run_cnn_fl(m, Aggregation.COLREL, res.A, non_iid_s=3)
+        out = run_cnn_fl(m, "colrel", res.A, non_iid_s=3)
         us = (time.perf_counter() - t0) * 1e6
         rows.append((
             f"fig4/colrel_{label}",
@@ -77,7 +77,7 @@ def bench_fig4_mmwave() -> List[Row]:
     # blind baseline under the same mmWave uplinks
     m = cases["no_collab"]
     t0 = time.perf_counter()
-    out = run_cnn_fl(m, Aggregation.FEDAVG_BLIND, fedavg_weights(10), non_iid_s=3)
+    out = run_cnn_fl(m, "fedavg_blind", fedavg_weights(10), non_iid_s=3)
     us = (time.perf_counter() - t0) * 1e6
     rows.append((
         "fig4/fedavg_blind", us / max(BENCH_ROUNDS, 1),

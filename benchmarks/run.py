@@ -19,7 +19,14 @@ import traceback
 
 
 def all_benches():
-    from . import channel_bench, kernels_bench, paper_figures, roofline_report, theory
+    from . import (
+        channel_bench,
+        kernels_bench,
+        paper_figures,
+        roofline_report,
+        strategy_bench,
+        theory,
+    )
 
     return {
         "fig2a": paper_figures.bench_fig2a,
@@ -33,6 +40,7 @@ def all_benches():
         "roofline": roofline_report.bench_dryrun_roofline,
         "channel_sampler": channel_bench.bench_channel_sampler,
         "channel_adaptive": channel_bench.bench_channel_adaptive,
+        "strategies": strategy_bench.bench_strategy_matrix,
     }
 
 

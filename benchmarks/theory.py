@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import strategies
 from repro.core import (
-    Aggregation,
     initial_weights,
     optimize_weights,
     sample_round,
@@ -61,7 +61,7 @@ def _quad_mse(model, A, *, rounds=120, local_steps=8, seeds=(0, 1, 2), sigma=0.5
     for seed in seeds:
         t = FLTrainer(loss_fn, {"x": jnp.zeros(16)}, model, A, clients(seed),
                       sgd(sched), sgd_momentum(1.0, beta=0.0),
-                      local_steps=local_steps, aggregation=Aggregation.COLREL_FUSED,
+                      local_steps=local_steps, strategy=strategies.get("colrel", fused=True),
                       seed=seed)
         tail = []
         for r in range(rounds):

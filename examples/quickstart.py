@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch
-from repro.core import Aggregation, fedavg_weights, optimize_weights, topology
+from repro.core import fedavg_weights, optimize_weights, topology
 from repro.data import synthetic_tokens, partition_iid
 from repro.data.pipeline import make_federated_clients
 from repro.fl import FLTrainer
@@ -47,19 +47,19 @@ def main():
     arrays = {"tokens": toks[:, :-1], "labels": toks[:, 1:].astype(np.int32)}
     parts = partition_iid(600, link_model.n, seed=0)
 
-    def run(agg, A, tag):
+    def run(strategy, A, tag):
         clients = make_federated_clients(arrays, parts, batch_size=8)
         t = FLTrainer(
             bundle.loss_fn, params, link_model, A, clients,
             sgd(0.25), sgd_momentum(1.0, beta=0.9),
-            local_steps=args.local_steps, aggregation=agg, seed=0,
+            local_steps=args.local_steps, strategy=strategy, seed=0,
         )
         t.run(args.rounds)
         print(f"{tag:16s} loss: {t.log.loss[0]:.3f} -> {t.log.loss[-1]:.3f}")
         return t.log.loss[-1]
 
-    colrel = run(Aggregation.COLREL, res.A, "ColRel")
-    blind = run(Aggregation.FEDAVG_BLIND, fedavg_weights(10), "FedAvg-blind")
+    colrel = run("colrel", res.A, "ColRel")
+    blind = run("fedavg_blind", fedavg_weights(10), "FedAvg-blind")
     print(f"\nColRel final loss {colrel:.3f} vs blind {blind:.3f} "
           f"({'better' if colrel < blind else 'worse'})")
 

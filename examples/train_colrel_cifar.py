@@ -8,6 +8,14 @@ DESIGN.md §7).  Saves a JSON training log + msgpack checkpoint.
     PYTHONPATH=src python examples/train_colrel_cifar.py \
         --topology fig2b --strategy colrel --non-iid-s 3 --rounds 200
 
+The whole experiment is one declarative :class:`ExperimentSpec`
+(``repro/fl/experiment.py``); this script is argv -> spec -> run.
+``--strategy`` enumerates the open strategy registry
+(``repro.strategies``), so schemes registered out of tree — like the
+beyond-paper ``multihop`` (K-hop relaying) and ``memory`` (implicit
+gossip) strategies — appear here automatically; pass constructor
+options as ``--strategy-opt hops=3``.
+
 Beyond the paper, ``--channel`` swaps the i.i.d. connectivity for a
 dynamic channel preset (``markov`` = bursty Gilbert–Elliott blockage
 with the same marginals, ``mobility`` = waypoint-drifting mmWave
@@ -16,39 +24,42 @@ the oracle link knowledge: alpha is re-optimized every ``--reopt-every``
 rounds from online link estimates.
 
     PYTHONPATH=src python examples/train_colrel_cifar.py \
-        --channel markov --adaptive --rounds 200
+        --channel markov --strategy memory --rounds 200
 """
 
 import argparse
 import json
 
-import jax
-import numpy as np
-
-from repro.channel import AdaptiveConfig, AdaptiveWeightSchedule
+from repro import strategies
 from repro.checkpoint import save_checkpoint
-from repro.configs import CHANNEL_PRESETS, colrel_paper, make_channel
-from repro.core import Aggregation, fedavg_weights, optimize_weights, topology
-from repro.data import partition_iid, partition_sort_and_partition, synthetic_cifar
-from repro.data.pipeline import make_federated_clients
-from repro.fl import FLTrainer
-from repro.models import build
-from repro.optim import sgd, sgd_momentum
+from repro.configs import CHANNEL_PRESETS
+from repro.fl import TOPOLOGIES, ExperimentSpec, build_experiment
 
-TOPOLOGIES = {
-    "fig2a": lambda: topology.paper_fig2a(),
-    "fig2b": lambda: topology.paper_fig2b(),
-    "mmwave_int": lambda: topology.paper_mmwave_layout(d2d_mode="intermittent"),
-    "mmwave_perm": lambda: topology.paper_mmwave_layout(d2d_mode="permanent"),
-    "no_collab": lambda: topology.no_collaboration(10, 0.3),
-}
+
+def parse_opt(kv: str):
+    """key=value -> (key, typed value); bare ints/floats/bools decoded."""
+    key, _, raw = kv.partition("=")
+    if not _:
+        raise argparse.ArgumentTypeError(f"expected key=value, got {kv!r}")
+    for cast in (int, float):
+        try:
+            return key, cast(raw)
+        except ValueError:
+            pass
+    if raw.lower() in ("true", "false"):
+        return key, raw.lower() == "true"
+    return key, raw
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--topology", default="fig2b", choices=sorted(TOPOLOGIES))
     ap.add_argument("--strategy", default="colrel",
-                    choices=["colrel", "fedavg_blind", "fedavg_nonblind", "fedavg_perfect"])
+                    choices=sorted(strategies.available()))
+    ap.add_argument("--strategy-opt", action="append", default=[],
+                    type=parse_opt, metavar="KEY=VALUE",
+                    help="strategy constructor option (repeatable), "
+                         "e.g. --strategy-opt hops=3")
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--non-iid-s", type=int, default=0, help="0 = IID")
     ap.add_argument("--channel", default="static", choices=sorted(CHANNEL_PRESETS),
@@ -63,74 +74,43 @@ def main():
     ap.add_argument("--out", default="colrel_cifar")
     args = ap.parse_args()
 
-    setup = colrel_paper.full() if args.full_width else colrel_paper.reduced()
-    link_model = TOPOLOGIES[args.topology]()
-    channel = make_channel(args.channel, link_model, seed=0)
-    # mobility derives its own (drifting) geometry; round-0 model otherwise
-    # equals the chosen topology (markov preserves its marginals exactly)
-    init_model = channel.model_for_round(0)
-
-    adaptive = None
     if args.adaptive:
-        if args.strategy != "colrel":
+        # derive the guard from the registry, not a hardcoded name list:
+        # adaptive re-optimizes alpha, which only A-reading strategies use
+        probe = strategies.get(args.strategy, **dict(args.strategy_opt))
+        if not probe.needs_A:
             raise SystemExit(
-                "--adaptive re-optimizes the relay alpha, which only the "
-                "colrel strategy reads; fedavg_* baselines ignore A"
+                f"--adaptive re-optimizes the relay alpha, which "
+                f"{args.strategy!r} ignores (needs_A=False); A-reading "
+                f"strategies: "
+                f"{[n for n in strategies.available() if strategies.get(n).needs_A]}"
             )
-        adaptive = AdaptiveWeightSchedule(
-            init_model.n,
-            AdaptiveConfig(
-                every=args.reopt_every,
-                warmup=min(args.reopt_every, 20),
-                # forget old evidence under drifting geometry
-                decay=0.995 if args.channel.startswith("mobility") else 1.0,
-                prune_below=0.02,
-            ),
-        )
 
-    if args.strategy == "colrel":
-        if args.adaptive:
-            # no oracle link knowledge: start blind, let re-opt take over
-            A, agg = fedavg_weights(init_model.n), Aggregation.COLREL
-            print(f"adaptive alpha: identity start, re-opt every {args.reopt_every}")
-        else:
-            res = optimize_weights(init_model, sweeps=30, fine_tune_sweeps=30)
-            A, agg = res.A, Aggregation.COLREL
-            print(f"COPT-alpha: S {res.S_init:.2f} -> {res.S:.2f}")
-    else:
-        A, agg = fedavg_weights(init_model.n), Aggregation(args.strategy)
-
-    images, labels = synthetic_cifar(n=10000, seed=1)
-    ev_img, ev_lab = synthetic_cifar(n=2000, seed=2)
-    if args.non_iid_s:
-        parts = partition_sort_and_partition(labels, link_model.n, s=args.non_iid_s)
-    else:
-        parts = partition_iid(len(labels), link_model.n)
-    clients = make_federated_clients({"images": images, "labels": labels}, parts,
-                                     setup.batch_size)
-
-    bundle = build(setup.cnn)
-
-    @jax.jit
-    def eval_fn(params):
-        _, m = bundle.loss_fn(params, {"images": ev_img, "labels": ev_lab})
-        return m
-
-    trainer = FLTrainer(
-        bundle.loss_fn, bundle.init(jax.random.PRNGKey(0)), init_model, A, clients,
-        sgd(setup.lr, weight_decay=setup.weight_decay),
-        sgd_momentum(1.0, beta=setup.server_momentum),
-        local_steps=setup.local_steps, aggregation=agg, seed=0,
-        eval_fn=eval_fn, channel=channel, adaptive=adaptive,
+    spec = ExperimentSpec(
+        model="cifar_cnn_full" if args.full_width else "cifar_cnn",
+        topology=args.topology,
+        non_iid_s=args.non_iid_s,
+        strategy=args.strategy,
+        strategy_options=dict(args.strategy_opt),
+        channel=args.channel,
+        adaptive=args.adaptive,
+        reopt_every=args.reopt_every,
+        rounds=args.rounds,
     )
-    trainer.run(args.rounds, eval_every=max(args.rounds // 10, 1), verbose=True)
+    exp = build_experiment(spec)
+    if exp.copt_result is not None:
+        res = exp.copt_result
+        print(f"COPT-alpha: S {res.S_init:.2f} -> {res.S:.2f}")
+    elif args.adaptive:
+        print(f"adaptive alpha: identity start, re-opt every {args.reopt_every}")
+    exp.run(eval_every=max(args.rounds // 10, 1), verbose=True)
 
-    log = trainer.log.to_dict()
-    log["config"] = vars(args)
+    log = exp.log.to_dict()
+    log["config"] = {**vars(args), "strategy_opt": dict(args.strategy_opt)}
     with open(f"{args.out}.json", "w") as f:
         json.dump(log, f, indent=1)
-    save_checkpoint(f"{args.out}.msgpack", trainer.params)
-    final = trainer.log.eval_metrics[-1] if trainer.log.eval_metrics else {}
+    save_checkpoint(f"{args.out}.msgpack", exp.params)
+    final = exp.log.eval_metrics[-1] if exp.log.eval_metrics else {}
     print(f"\nfinal: {final}  (log -> {args.out}.json, ckpt -> {args.out}.msgpack)")
 
 

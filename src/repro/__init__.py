@@ -1,8 +1,10 @@
 """repro: ColRel (collaborative-relaying federated learning) in JAX.
 
-Subpackages: core (the paper), channel (dynamic link processes + online
-estimation + adaptive alpha), fl (federated runtime), models (the zoo),
-optim, data, dist, kernels (Pallas), checkpoint, configs, launch.
+Subpackages: core (the paper), strategies (the open aggregation-strategy
+registry), channel (dynamic link processes + online estimation +
+adaptive alpha), fl (federated runtime + declarative ExperimentSpec),
+models (the zoo), optim, data, dist, kernels (Pallas), checkpoint,
+configs, launch.
 """
 
 __version__ = "1.0.0"

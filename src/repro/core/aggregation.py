@@ -1,9 +1,13 @@
-"""PS aggregation strategies: ColRel and the paper's three FedAvg baselines.
+"""Legacy aggregation entry points, now thin shims over ``repro.strategies``.
 
-All strategies consume *stacked per-client updates* ``(n, d)`` plus the
-round's sampled connectivity, and return the global delta the PS applies.
-They are pure JAX functions (jit/vmap/pjit friendly); the tau masks enter
-as traced arrays so one compiled step serves every round.
+``Aggregation`` survives as the enum of the paper's five original
+schemes; every value resolves through the open strategy registry
+(``repro.strategies``), which is where new schemes (multi-hop relaying,
+memory gossip, ...) register without touching this module.  The
+``COLREL_FUSED`` value is deprecated — it was one of two spellings of
+the same choice (the other being ``RoundConfig.use_fused_kernel``); both
+forward, with a warning, to the ``fused`` execution option of the single
+``colrel`` strategy.
 """
 
 from __future__ import annotations
@@ -12,45 +16,41 @@ import enum
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-
-from . import relay as _relay
 
 __all__ = ["Aggregation", "aggregate"]
 
 
 class Aggregation(str, enum.Enum):
-    """Paper Sec. V strategies."""
+    """Paper Sec. V strategies (registry names; open set lives in
+    ``repro.strategies.available()``)."""
 
     COLREL = "colrel"                  # the paper's scheme (faithful path)
-    COLREL_FUSED = "colrel_fused"      # exact fused weighted-reduction path
+    COLREL_FUSED = "colrel_fused"      # DEPRECATED: colrel with fused=True
     FEDAVG_PERFECT = "fedavg_perfect"  # upper bound: everyone always arrives
     FEDAVG_BLIND = "fedavg_blind"      # sum of arrivals / n (OAC-style)
     FEDAVG_NONBLIND = "fedavg_nonblind"  # sum of arrivals / #arrivals
 
 
 def aggregate(
-    strategy: Aggregation | str,
+    strategy,
     updates: jax.Array,
     *,
     tau_up: jax.Array,
     tau_dd: Optional[jax.Array] = None,
     A: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Global delta ``(d,)`` from stacked client updates ``(n, d)``."""
-    strategy = Aggregation(strategy)
-    n = updates.shape[0]
-    t = tau_up.astype(updates.dtype)
+    """Global delta ``(d,)`` from stacked client updates ``(n, d)``.
 
-    if strategy == Aggregation.FEDAVG_PERFECT:
-        return jnp.mean(updates, axis=0)
-    if strategy == Aggregation.FEDAVG_BLIND:
-        return (t @ updates) / n
-    if strategy == Aggregation.FEDAVG_NONBLIND:
-        k = jnp.maximum(jnp.sum(t), 1.0)
-        return (t @ updates) / k
-    if A is None or tau_dd is None:
-        raise ValueError(f"{strategy} needs A and tau_dd")
-    return _relay.colrel_round_delta(
-        updates, A, tau_up, tau_dd, fused=strategy == Aggregation.COLREL_FUSED
-    )
+    ``strategy`` is a registry name, ``Aggregation`` value, or an
+    :class:`~repro.strategies.AggregationStrategy` instance (stateless
+    call: carried state is initialized and discarded — use the strategy
+    object directly to thread state across rounds).
+    """
+    from repro import strategies as _strategies  # deferred: core loads first
+
+    s = _strategies.resolve(strategy)
+    if s.needs_A and (A is None or tau_dd is None):
+        raise ValueError(f"{s.name} needs A and tau_dd")
+    state = s.init_state(updates.shape[0], updates.shape[-1])
+    delta, _ = s.aggregate(updates, tau_up, tau_dd, A, state)
+    return delta

@@ -1,4 +1,14 @@
 from .round import RoundConfig, make_round_fn
 from .trainer import FLTrainer, TrainLog
+from .experiment import Experiment, ExperimentSpec, TOPOLOGIES, build_experiment
 
-__all__ = ["RoundConfig", "make_round_fn", "FLTrainer", "TrainLog"]
+__all__ = [
+    "RoundConfig",
+    "make_round_fn",
+    "FLTrainer",
+    "TrainLog",
+    "Experiment",
+    "ExperimentSpec",
+    "TOPOLOGIES",
+    "build_experiment",
+]

@@ -4,18 +4,27 @@ The round implements Algorithms 1 + 2 of the paper:
   1. every client runs ``T`` local SGD steps from the PS model (Alg. 1, 1-7),
   2. clients exchange updates over the sampled D2D links and each transmits
      a weighted consensus to the PS (Alg. 1, 8-11 / Eq. (3)),
-  3. the PS blindly sums whatever arrives (Alg. 2, line 5) and applies the
+  3. the PS applies whatever aggregation *strategy* the round was built
+     with (the paper's ColRel, a FedAvg baseline, K-hop relaying, memory
+     replay, or anything registered in ``repro.strategies``) and the
      server optimizer (global momentum in the paper's experiments).
 
 Connectivity realizations ``tau_up (n,) / tau_dd (n, n)`` are *traced
 inputs* so a single compiled round serves every round of training.
+Strategy state (e.g. the memory strategy's replay buffer) threads
+through the round as the ``agg_state`` pytree — shape-stable across
+rounds, so tau/alpha swaps never recompile; stateless strategies carry
+``()``.
 
 Execution modes (DESIGN.md §3):
   * ``per_client``        — vmap over the client axis (client = mesh "data"
-                            shard).  Faithful or fused aggregation.
+                            shard).  The one mode that materializes the
+                            per-client update stack, so the only mode
+                            open to non-scalar-collapsible strategies.
   * ``client_sequential`` — lax.scan over clients; peak memory is a single
     model copy regardless of n (for the 100B+ archs).  Mathematically
-    identical; only fused aggregation (a running weighted sum).
+    identical; consumes the strategy's scalar collapse (a running
+    weighted sum).
   * ``weighted_grad``     — the T=1 algebraic collapse: ColRel ==
     per-client-weighted data-parallel SGD, no per-client model copies.
 """
@@ -23,20 +32,21 @@ Execution modes (DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro import strategies as strategy_registry
 from repro.core.aggregation import Aggregation
-from repro.core import flatten
-from repro.core import relay as relay_ops
 from repro.dist import constrain_grads, spmd_axis_name
 from repro.optim import Optimizer
 from repro.optim.base import global_norm
+from repro.strategies.base import AggregationStrategy, ExecutionContext
 
 Params = Any
+
+StrategySpec = Union[Aggregation, str, AggregationStrategy]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,17 +54,17 @@ class RoundConfig:
     n_clients: int
     local_steps: int  # the paper's T
     mode: str = "per_client"  # per_client | client_sequential | weighted_grad
-    aggregation: Aggregation = Aggregation.COLREL
+    # aggregation strategy: registry name, legacy Aggregation enum value,
+    # or a constructed AggregationStrategy instance
+    aggregation: StrategySpec = "colrel"
     use_flash: bool = False
     # Under pjit, pin the vmapped client axis to these mesh axes so each
     # client's divergent model copy lives on its own data shard.
     spmd_axes: Optional[tuple] = None
     # unroll the local-steps / client scans (dry-run cost probes)
     unroll: bool = False
-    # per_client COLREL: ravel the update pytree into one (n, d) buffer and
-    # run the fused Pallas aggregation kernel (mixing mask + relay mix +
-    # blind PS sum in a single HBM pass) instead of per-leaf tensordots.
-    # The per-leaf path stays the default and is the correctness oracle.
+    # DEPRECATED: forwards to the colrel strategy's fused="kernel"
+    # execution option (strategies.get("colrel", fused="kernel")).
     use_fused_kernel: bool = False
     # dtype of the flattened (n, d) update stack ("float32" | "bfloat16");
     # accumulation is fp32 either way.
@@ -63,11 +73,28 @@ class RoundConfig:
     fused_block_d: int = 2048
 
     def __post_init__(self):
-        if self.use_fused_kernel and Aggregation(self.aggregation) != Aggregation.COLREL:
+        # fail at construction, not first trace; canonical_name does not
+        # instantiate, so no deprecation warning fires twice
+        name = strategy_registry.canonical_name(self.aggregation)
+        if self.use_fused_kernel and name != "colrel":
             raise ValueError(
-                "use_fused_kernel only applies to Aggregation.COLREL "
+                "use_fused_kernel only applies to the colrel strategy "
                 f"(got {self.aggregation}); it would be silently inert"
             )
+
+    def resolve_strategy(self) -> AggregationStrategy:
+        """The configured strategy instance (deprecated spellings warn)."""
+        return strategy_registry.resolve(
+            self.aggregation, fused_kernel=self.use_fused_kernel
+        )
+
+    def execution_context(self) -> ExecutionContext:
+        return ExecutionContext(
+            n_clients=self.n_clients,
+            flat_dtype=jnp.dtype(self.flat_dtype),
+            fused_block_d=self.fused_block_d,
+            spmd_axes=self.spmd_axes,
+        )
 
 
 def _tree_sub(a: Params, b: Params) -> Params:
@@ -92,23 +119,6 @@ def _local_sgd(loss_fn, client_opt: Optimizer, params: Params, batches: Params,
     return _tree_sub(p_final, params), jnp.mean(losses)
 
 
-def _strategy_weights(rc: RoundConfig, tau_up, tau_dd, A):
-    """Per-client scalar weights w such that global_delta = (1/norm) w @ deltas.
-
-    For every strategy except faithful COLREL the two-stage aggregation
-    collapses exactly onto scalar weights (see core/relay.py)."""
-    n = rc.n_clients
-    t = tau_up.astype(jnp.float32)
-    if rc.aggregation == Aggregation.FEDAVG_PERFECT:
-        return jnp.ones((n,), jnp.float32) / n
-    if rc.aggregation == Aggregation.FEDAVG_BLIND:
-        return t / n
-    if rc.aggregation == Aggregation.FEDAVG_NONBLIND:
-        return t / jnp.maximum(jnp.sum(t), 1.0)
-    w = relay_ops.effective_weights(A.astype(jnp.float32), t, tau_dd.astype(jnp.float32))
-    return w / n
-
-
 def make_round_fn(
     loss_fn: Callable,
     client_opt: Optimizer,
@@ -116,66 +126,48 @@ def make_round_fn(
     rc: RoundConfig,
     grad_shardings: Optional[Params] = None,
 ):
-    """Returns round(params, server_state, batches, tau_up, tau_dd, A).
+    """Returns round(params, server_state, agg_state, batches,
+    tau_up, tau_dd, A) -> (params, server_state, agg_state, metrics).
 
     ``batches``: pytree with leaves shaped (n_clients, T, B, ...) for
     per_client/client_sequential, or (T=1 collapsed) (n_clients, B, ...)
-    for weighted_grad.
+    for weighted_grad.  ``agg_state`` is the strategy's carried state
+    (``strategy.init_state(n, d)``; ``()`` for stateless strategies).
     """
+    strategy = rc.resolve_strategy()
+    ctx = rc.execution_context()
+    if rc.mode != "per_client" and (strategy.stateful
+                                    or not strategy.scalar_collapsible):
+        # non-per_client modes consume only the scalar collapse and never
+        # call aggregate/aggregate_tree, so a stateful strategy's carried
+        # state would silently freeze at init_state
+        raise ValueError(
+            f"strategy {strategy.name!r} needs the per_client mode: only it "
+            f"materializes the update stack that stateful or "
+            f"non-scalar-collapsible strategies require (got mode={rc.mode!r})"
+        )
 
     def client_delta(params, client_batches):
         return _local_sgd(loss_fn, client_opt, params, client_batches, unroll=rc.unroll)
 
-    def round_fn(params, server_state, batches, tau_up, tau_dd, A):
+    def round_fn(params, server_state, agg_state, batches, tau_up, tau_dd, A):
         # Realized scalar weights this round (for COLREL: the exact fused
         # collapse w_j = sum_i tau_i tau_ji alpha_ij, scaled 1/n).  Used by
         # the scalar-weight execution branches below and logged as
         # ``weight_sum`` — under the unbiasedness condition (5) its
         # expectation is 1, so its round-to-round dispersion is the
         # realized counterpart of the variance proxy S that COPT-alpha
-        # (and the adaptive re-optimization schedule) minimize.
-        w_scalar = _strategy_weights(rc, tau_up, tau_dd, A)
+        # (and the adaptive re-optimization schedule) minimize.  None for
+        # strategies that do not collapse (their weight_sum logs as NaN).
+        w_scalar = strategy.weights(tau_up, tau_dd, A)
         if rc.mode == "per_client":
             spmd = spmd_axis_name(rc.spmd_axes)
             deltas, losses = jax.vmap(
                 client_delta, in_axes=(None, 0), spmd_axis_name=spmd
             )(params, batches)
-            if rc.aggregation == Aggregation.COLREL and rc.use_fused_kernel:
-                # flatten-once fused path: ravel the update pytree into a
-                # single contiguous (n, d) stack, stream it through the
-                # fused aggregation exactly once (mask + relay mix + blind
-                # PS sum, fp32 accumulation), unravel the (d,) delta.
-                from repro.kernels import ops as kernel_ops
-
-                spec = flatten.flat_spec(deltas, stacked=True)
-                stack = flatten.ravel_stacked(deltas, dtype=jnp.dtype(rc.flat_dtype))
-                if rc.spmd_axes:
-                    # Sharded execution: express the pass as a plain
-                    # contraction so GSPMD partitions it (per-shard partial
-                    # products + one (d,) all-reduce).  An opaque pallas
-                    # call has no partitioning rule — it would be
-                    # replicated, gathering the full stack onto every chip.
-                    gflat = w_scalar @ stack.astype(jnp.float32)
-                else:
-                    gflat = kernel_ops.fused_aggregate(
-                        A, tau_up, tau_dd, stack, block_d=rc.fused_block_d
-                    )
-                gdelta = flatten.unravel(spec, gflat, dtype=jnp.float32)
-            elif rc.aggregation == Aggregation.COLREL:
-                # faithful two-stage path: relay mix across the client axis,
-                # then the blind PS sum — exercised leaf-wise.
-                M = relay_ops.mixing_matrix(A.astype(jnp.float32), tau_dd.astype(jnp.float32))
-                t = tau_up.astype(jnp.float32)
-                gdelta = jax.tree.map(
-                    lambda D: jnp.tensordot(
-                        t, jnp.tensordot(M, D, axes=1), axes=1
-                    ) / rc.n_clients,
-                    deltas,
-                )
-            else:
-                gdelta = jax.tree.map(
-                    lambda D: jnp.tensordot(w_scalar, D, axes=1), deltas
-                )
+            gdelta, agg_state = strategy.aggregate_tree(
+                deltas, tau_up, tau_dd, A, agg_state, ctx
+            )
             mean_loss = jnp.mean(losses)
 
         elif rc.mode == "client_sequential":
@@ -251,8 +243,9 @@ def make_round_fn(
             "loss": mean_loss,
             "delta_norm": global_norm(gdelta),
             "participation": jnp.sum(tau_up.astype(jnp.float32)),
-            "weight_sum": jnp.sum(w_scalar),
+            "weight_sum": (jnp.sum(w_scalar) if w_scalar is not None
+                           else jnp.float32(jnp.nan)),
         }
-        return new_params, server_state, metrics
+        return new_params, server_state, agg_state, metrics
 
     return round_fn

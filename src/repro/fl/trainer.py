@@ -3,7 +3,9 @@ batches, invokes the compiled round function, tracks metrics, evaluates.
 
 This is the entry point the paper-reproduction experiments and the
 examples use on CPU; the production launch path (``repro/launch``) wraps
-the same round function in pjit with mesh shardings.
+the same round function in pjit with mesh shardings.  Prefer building it
+declaratively through :func:`repro.fl.experiment.build_experiment` — the
+constructor below is the assembled form.
 
 Connectivity comes from a :class:`~repro.channel.ChannelProcess` — the
 paper's i.i.d. model (the default, built from ``link_model``), bursty
@@ -13,6 +15,11 @@ longer assumes oracle link knowledge: it estimates ``(p, P, E)`` online
 from the realized taus and re-runs COPT-alpha every K rounds, swapping
 the fresh alpha into the (traced, so recompile-free) ``A`` argument of
 the compiled round.
+
+Aggregation is a pluggable :class:`~repro.strategies.AggregationStrategy`
+(``strategy=`` accepts a registry name or an instance); stateful
+strategies' carried state (e.g. the memory strategy's replay buffer)
+lives on the trainer and threads through the compiled round.
 """
 
 from __future__ import annotations
@@ -25,10 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import strategies as strategy_registry
 from repro.channel.base import ChannelProcess, StaticChannel
 from repro.channel.schedule import AdaptiveWeightSchedule
 from repro.core import LinkModel, variance_S
-from repro.core.aggregation import Aggregation
+from repro.core.flatten import flat_spec
 from repro.data.pipeline import ClientDataset
 from repro.fl.round import RoundConfig, make_round_fn
 from repro.optim import Optimizer
@@ -44,7 +52,8 @@ class TrainLog:
     eval_metrics: List[Dict[str, float]] = dataclasses.field(default_factory=list)
     participation: List[float] = dataclasses.field(default_factory=list)
     # realized sum of scalar aggregation weights (E = 1 when unbiased);
-    # its dispersion is the realized counterpart of the variance proxy S
+    # its dispersion is the realized counterpart of the variance proxy S.
+    # NaN for strategies with no scalar collapse (e.g. memory).
     weight_sums: List[float] = dataclasses.field(default_factory=list)
     # adaptive re-optimization events (empty without a schedule)
     reopt_rounds: List[int] = dataclasses.field(default_factory=list)
@@ -57,7 +66,8 @@ class TrainLog:
 
 
 class FLTrainer:
-    """Orchestrates ColRel / FedAvg training over an intermittent network."""
+    """Orchestrates pluggable-strategy FL training over an intermittent
+    network (ColRel, FedAvg baselines, multihop, memory, ...)."""
 
     def __init__(
         self,
@@ -70,7 +80,8 @@ class FLTrainer:
         server_opt: Optimizer,
         *,
         local_steps: int = 8,
-        aggregation: Aggregation = Aggregation.COLREL,
+        strategy: "str | strategy_registry.AggregationStrategy | None" = None,
+        aggregation: "str | strategy_registry.AggregationStrategy | None" = None,
         mode: str = "per_client",
         use_fused_kernel: bool = False,
         seed: int = 0,
@@ -78,12 +89,30 @@ class FLTrainer:
         channel: Optional[ChannelProcess] = None,
         adaptive: Optional[AdaptiveWeightSchedule] = None,
     ):
+        if strategy is not None and aggregation is not None:
+            raise ValueError("pass strategy= or aggregation=, not both")
+        spec = strategy if strategy is not None else (
+            aggregation if aggregation is not None else "colrel")
+        self.strategy = strategy_registry.resolve(
+            spec, fused_kernel=use_fused_kernel)
         if channel is None:
             if link_model is None:
                 raise ValueError("provide link_model or channel")
             channel = StaticChannel(link_model, seed=seed)
         self.channel = channel
         self.adaptive = adaptive
+        if adaptive is not None and not self.strategy.needs_A:
+            raise ValueError(
+                f"adaptive alpha re-optimization only affects strategies "
+                f"that read A; {self.strategy.name!r} ignores it"
+            )
+        if adaptive is not None and self.strategy.calibration_tracks_A:
+            raise ValueError(
+                f"strategy {self.strategy.name!r} was calibrated against a "
+                "fixed alpha; the adaptive schedule swaps alpha mid-run, "
+                "which would silently stale the calibration — run it "
+                "uncalibrated or without adaptive"
+            )
         n = channel.n
         if link_model is not None and link_model.n != n:
             raise ValueError(f"link_model.n={link_model.n} != channel.n={n}")
@@ -94,12 +123,13 @@ class FLTrainer:
         self.params = init_params
         self.eval_fn = eval_fn
         rc = RoundConfig(
-            n_clients=n, local_steps=local_steps, mode=mode, aggregation=aggregation,
-            use_fused_kernel=use_fused_kernel,
+            n_clients=n, local_steps=local_steps, mode=mode,
+            aggregation=self.strategy,
         )
         self.rc = rc
         self.server_opt = server_opt
         self.server_state = server_opt.init(init_params)
+        self.agg_state = self.strategy.init_state(n, flat_spec(init_params).d)
         self._round_fn = jax.jit(make_round_fn(loss_fn, client_opt, server_opt, rc))
         self.log = TrainLog()
 
@@ -121,9 +151,10 @@ class FLTrainer:
         for r in range(start, start + rounds):
             tau_up, tau_dd = self.channel.tau_for_round(r)
             batches = self._stack_batches()
-            self.params, self.server_state, metrics = self._round_fn(
+            self.params, self.server_state, self.agg_state, metrics = self._round_fn(
                 self.params,
                 self.server_state,
+                self.agg_state,
                 jax.tree.map(jnp.asarray, batches),
                 jnp.asarray(tau_up, jnp.float32),
                 jnp.asarray(tau_dd, jnp.float32),

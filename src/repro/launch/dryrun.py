@@ -21,7 +21,7 @@ from pathlib import Path
 import jax
 
 from repro.configs.base import CLI_ALIASES, INPUT_SHAPES, get_arch, supported_shapes
-from repro.core.aggregation import Aggregation
+from repro import strategies as strategy_registry
 from repro.launch.mesh import make_production_mesh, n_clients
 from repro.launch.roofline import (
     collective_bytes,
@@ -98,7 +98,7 @@ def _probe_costs(arch_id, shape_name, mesh, aggregation, fl_mode, cfg, k) -> dic
 
 
 def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
-            aggregation: Aggregation = Aggregation.COLREL,
+            aggregation: str = "colrel",
             fl_mode: str | None = None, tag: str = "",
             probe: bool = True, static_window: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -174,7 +174,7 @@ def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "chips": chips,
         "n_clients": n_clients(mesh),
-        "aggregation": str(aggregation.value),
+        "aggregation": strategy_registry.canonical_name(aggregation),
         "fl_mode": fl_mode or cfg0.fl_mode,
         "tag": tag,
         "lower_s": round(t_lower, 2),
@@ -210,7 +210,7 @@ def main():
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true", help="every supported arch x shape")
     ap.add_argument("--aggregation", default="colrel",
-                    choices=[a.value for a in Aggregation])
+                    choices=sorted(strategy_registry.available()))
     ap.add_argument("--fl-mode", default=None,
                     choices=[None, "per_client", "client_sequential",
                              "weighted_grad", "weighted_flat"])
@@ -247,7 +247,7 @@ def main():
                     # cost probes only on the single-pod mesh (the roofline
                     # table is single-pod; multi-pod proves lowering+memory)
                     rec = run_one(arch, shape, multi_pod=mp,
-                                  aggregation=Aggregation(args.aggregation),
+                                  aggregation=args.aggregation,
                                   fl_mode=args.fl_mode, tag=args.tag,
                                   probe=not mp, static_window=args.static_window)
                     fname.write_text(json.dumps(rec, indent=1))

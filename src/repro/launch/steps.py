@@ -20,9 +20,10 @@ from typing import Any, Dict, Tuple
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import strategies as strategy_registry
 from repro.configs.base import get_arch
-from repro.core.aggregation import Aggregation
-from repro.fl.round import RoundConfig, make_round_fn
+from repro.core import flatten
+from repro.fl.round import RoundConfig, StrategySpec, make_round_fn
 
 
 def get_arch_cfg(arch_id: str):
@@ -44,7 +45,7 @@ def build_step(
     shape_name: str,
     mesh,
     *,
-    aggregation: Aggregation = Aggregation.COLREL,
+    aggregation: StrategySpec = "colrel",
     fl_mode: str | None = None,
     cfg_override=None,
 ) -> Tuple[Any, Dict[str, Any], Any, Any]:
@@ -103,11 +104,12 @@ def build_step(
     bundle = build(cfg)
 
     if specs["kind"] == "train":
+        strategy = strategy_registry.resolve(aggregation)
         rc = RoundConfig(
             n_clients=n_clients(mesh),
             local_steps=DRYRUN_LOCAL_STEPS,
             mode=mode,
-            aggregation=aggregation,
+            aggregation=strategy,
             spmd_axes=ca if mode in ("per_client", "weighted_grad") else None,
             unroll=getattr(cfg, "scan_unroll", False),
         )
@@ -119,20 +121,29 @@ def build_step(
             rc,
             grad_shardings=psh if fsdp else None,
         )
+        # strategy carried state (replay buffers etc.): lower against its
+        # abstract shape; replicated for now (an (n, d) buffer would shard
+        # over the client axes once a stateful strategy reaches production)
+        d_flat = flatten.flat_spec(specs["params"]).d
+        agg_state = jax.eval_shape(
+            lambda: strategy.init_state(rc.n_clients, d_flat)
+        )
         ssh = shard_rules.param_shardings(cfg, specs["server_state"], mesh, fsdp=fsdp)
         bsh = shard_rules.train_batch_shardings(mesh, mode, specs["batches"])
         rep = NamedSharding(mesh, P())
-        in_sh = (psh, ssh, bsh, rep, rep, rep)
+        st_sh = jax.tree.map(lambda _: rep, agg_state)
+        in_sh = (psh, ssh, st_sh, bsh, rep, rep, rep)
         metrics_sh = {
             "loss": rep,
             "delta_norm": rep,
             "participation": rep,
             "weight_sum": rep,
         }
-        out_sh = (psh, ssh, metrics_sh)
+        out_sh = (psh, ssh, st_sh, metrics_sh)
         lower_args = (
             specs["params"],
             specs["server_state"],
+            agg_state,
             specs["batches"],
             specs["tau_up"],
             specs["tau_dd"],

@@ -19,9 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import strategies as strategy_registry
 from repro.configs.base import get_arch
-from repro.core import Aggregation, optimize_weights, topology
+from repro.core import optimize_weights, topology
 from repro.core.connectivity import sample_round
+from repro.core.flatten import flat_spec
 from repro.fl.round import RoundConfig, make_round_fn
 from repro.models import build, count_params
 from repro.optim import sgd, sgd_momentum
@@ -36,22 +38,25 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--batch", type=int, default=4, help="per-client batch")
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
-    ap.add_argument("--aggregation", default=None,
-                    choices=[a.value for a in Aggregation],
-                    help="default: colrel with --fused-kernel, else colrel_fused")
+    ap.add_argument("--aggregation", default="colrel",
+                    choices=sorted(strategy_registry.available()),
+                    help="aggregation strategy (repro.strategies registry)")
     ap.add_argument("--fused-kernel", action="store_true",
-                    help="flatten-once fused Pallas aggregation (COLREL only)")
+                    help="flatten-once fused Pallas aggregation (colrel only)")
     ap.add_argument("--p-up", type=float, default=0.3)
     ap.add_argument("--p-c", type=float, default=0.8)
     args = ap.parse_args()
 
-    # the fused kernel only exists on the faithful COLREL path; refuse the
+    # the fused kernel only exists on the colrel path; refuse the
     # silently-inert combination rather than measuring the wrong code.
-    if args.aggregation is None:
-        args.aggregation = "colrel" if args.fused_kernel else "colrel_fused"
-    elif args.fused_kernel and Aggregation(args.aggregation) != Aggregation.COLREL:
+    if args.fused_kernel and args.aggregation != "colrel":
         ap.error(f"--fused-kernel requires --aggregation colrel "
                  f"(got {args.aggregation})")
+    strategy = strategy_registry.get(
+        args.aggregation,
+        **({"fused": "kernel"} if args.fused_kernel
+           else {"fused": "collapse"} if args.aggregation == "colrel" else {}),
+    )
 
     arch = get_arch(args.arch)
     cfg = arch.smoke() if args.smoke else arch.full()
@@ -67,11 +72,11 @@ def main():
     A = jnp.asarray(res.A, jnp.float32)
 
     rc = RoundConfig(n_clients=n, local_steps=args.local_steps,
-                     mode="per_client", aggregation=Aggregation(args.aggregation),
-                     use_fused_kernel=args.fused_kernel)
+                     mode="per_client", aggregation=strategy)
     server_opt = sgd_momentum(1.0, beta=0.9)
     round_fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.25), server_opt, rc))
     sstate = server_opt.init(params)
+    agg_state = strategy.init_state(n, flat_spec(params).d)
 
     rng = np.random.default_rng(0)
     V, S, B, T = cfg.vocab_size, args.seq_len, args.batch, args.local_steps
@@ -85,8 +90,8 @@ def main():
                 rng.normal(size=(n, T, B, cfg.frontend_tokens, cfg.d_model)),
                 cfg.jdtype)
         t0 = time.perf_counter()
-        params, sstate, metrics = round_fn(
-            params, sstate, batches,
+        params, sstate, agg_state, metrics = round_fn(
+            params, sstate, agg_state, batches,
             jnp.asarray(tau_up, jnp.float32), jnp.asarray(tau_dd, jnp.float32), A)
         jax.block_until_ready(metrics["loss"])
         print(f"round {r:3d}  loss={float(metrics['loss']):.4f}  "

@@ -1,0 +1,53 @@
+"""Open aggregation-strategy family (DESIGN.md §6).
+
+The paper's ColRel and its FedAvg baselines, FedDec-style multi-hop
+relaying, and memory-based implicit gossiping, all behind one protocol
+(:class:`AggregationStrategy`) and a string-keyed registry::
+
+    from repro import strategies
+
+    strategies.available()                   # what the CLI / benches see
+    s = strategies.get("colrel", fused=True)
+    s = strategies.get("multihop", hops=3)
+
+    @strategies.register("quantized")
+    class QuantizedRelay(strategies.AggregationStrategy): ...
+
+Importing this package registers the built-in strategies.
+"""
+
+from repro.strategies.base import AggregationStrategy, ExecutionContext
+from repro.strategies.registry import (
+    available,
+    canonical_name,
+    get,
+    register,
+    register_deprecated_alias,
+    resolve,
+)
+from repro.strategies.classic import (
+    ColRelStrategy,
+    FedAvgBlind,
+    FedAvgNonBlind,
+    FedAvgPerfect,
+)
+from repro.strategies.multihop import MultiHopStrategy, multihop_correction
+from repro.strategies.memory import MemoryStrategy
+
+__all__ = [
+    "AggregationStrategy",
+    "ExecutionContext",
+    "available",
+    "canonical_name",
+    "get",
+    "register",
+    "register_deprecated_alias",
+    "resolve",
+    "ColRelStrategy",
+    "FedAvgBlind",
+    "FedAvgNonBlind",
+    "FedAvgPerfect",
+    "MultiHopStrategy",
+    "multihop_correction",
+    "MemoryStrategy",
+]

@@ -1,0 +1,136 @@
+"""The open aggregation-strategy protocol.
+
+A strategy answers one question per round: *given the stacked client
+updates and the realized connectivity, what delta does the PS apply?*
+The paper's ColRel and its FedAvg baselines are five points in this
+family; FedDec-style multi-hop relaying and memory-based implicit
+gossiping are two more that the old closed ``Aggregation`` enum could
+not express (they need multi-stage mixing / carried state, not just
+scalar weights).
+
+A strategy exposes up to three representations, from most to least
+collapsed:
+
+* ``weights(tau_up, tau_dd, A) -> (n,)`` — the scalar-collapse fast
+  path: per-client weights ``w`` such that ``delta = w @ updates``.
+  Only available when ``scalar_collapsible`` is True; it is what the
+  ``client_sequential`` / ``weighted_grad`` execution modes consume
+  (they never materialize the update stack) and what the ``weight_sum``
+  metric logs.
+* ``aggregate(updates, tau_up, tau_dd, A, state) -> (delta, state)`` —
+  the general dense-stack path on the flattened ``(n, d)`` update
+  buffer.  This is the only method a new strategy *must* implement; the
+  default routes through ``weights``.  ``state`` threads a carried
+  pytree through the compiled round (shape-stable across rounds so jit
+  never recompiles; ``()`` for stateless schemes).
+* ``aggregate_tree(deltas, ..., ctx) -> (gdelta, state)`` — the pytree
+  entry the ``per_client`` round mode calls.  The default collapses to
+  leaf-wise scalar weighting when possible and otherwise does the
+  flatten-once ravel -> ``aggregate`` -> unravel dance (DESIGN.md §4).
+  Strategies override it only to pick a different execution (e.g.
+  ColRel's faithful two-stage path or its fused Pallas kernel).
+
+All three are pure JAX functions of traced inputs: one compiled round
+serves every round of training, including alpha swaps mid-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatten
+
+__all__ = ["AggregationStrategy", "ExecutionContext"]
+
+State = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionContext:
+    """Execution knobs the round function hands to ``aggregate_tree``.
+
+    These belong to *how* the round executes (RoundConfig), not to the
+    strategy's math — the same strategy instance must produce the same
+    trajectory under any context.
+    """
+
+    n_clients: int
+    flat_dtype: Any = jnp.float32  # dtype of the raveled (n, d) stack
+    fused_block_d: int = 2048      # d-axis tile for Pallas kernels
+    spmd_axes: Optional[tuple] = None  # set when running under pjit
+
+
+class AggregationStrategy:
+    """Base class / protocol for PS aggregation schemes."""
+
+    #: registry key; set by subclasses
+    name: str = "base"
+    #: whether the scheme reads the relay weight matrix ``A`` (and hence
+    #: benefits from COPT-alpha / adaptive re-optimization)
+    needs_A: bool = False
+    #: whether ``weights`` is available (delta == w @ updates exactly)
+    scalar_collapsible: bool = False
+    #: whether the scheme carries state across rounds
+    stateful: bool = False
+
+    @property
+    def calibration_tracks_A(self) -> bool:
+        """True when the strategy holds host-side constants calibrated
+        against a specific alpha matrix (so swapping A mid-run — the
+        adaptive schedule — would silently stale them)."""
+        return False
+
+    # -- state -----------------------------------------------------------
+    def init_state(self, n: int, d: int) -> State:
+        """Initial carried state for ``n`` clients and flat dim ``d``."""
+        return ()
+
+    def calibrate(self, model, A) -> "AggregationStrategy":
+        """Hook for host-side calibration against link statistics
+        (e.g. unbiasedness corrections).  Returns a (possibly new)
+        strategy instance; the default is a no-op."""
+        del model, A
+        return self
+
+    # -- the three representations --------------------------------------
+    def weights(self, tau_up: jax.Array, tau_dd: jax.Array,
+                A: jax.Array) -> Optional[jax.Array]:
+        """Scalar collapse: (n,) weights with ``delta = w @ updates``,
+        or None when the scheme does not collapse."""
+        del tau_up, tau_dd, A
+        return None
+
+    def aggregate(self, updates: jax.Array, tau_up: jax.Array,
+                  tau_dd: jax.Array, A: jax.Array,
+                  state: State = ()) -> Tuple[jax.Array, State]:
+        """Dense-stack path: ``(n, d)`` updates -> ``(d,)`` delta."""
+        w = self.weights(tau_up, tau_dd, A)
+        if w is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} must implement aggregate() "
+                "(it is not scalar-collapsible)"
+            )
+        return jnp.asarray(w, updates.dtype) @ updates, state
+
+    def aggregate_tree(self, deltas, tau_up: jax.Array, tau_dd: jax.Array,
+                       A: jax.Array, state: State,
+                       ctx: ExecutionContext) -> Tuple[Any, State]:
+        """Pytree path for stacked per-client update trees (leading axis
+        ``n``).  Default: leaf-wise scalar weighting when collapsible,
+        else the flatten-once dense-stack path."""
+        w = self.weights(tau_up, tau_dd, A)
+        if w is not None and not self.stateful:
+            gdelta = jax.tree.map(lambda D: jnp.tensordot(w, D, axes=1), deltas)
+            return gdelta, state
+        spec = flatten.flat_spec(deltas, stacked=True)
+        stack = flatten.ravel_stacked(deltas, dtype=ctx.flat_dtype)
+        gflat, state = self.aggregate(stack, tau_up, tau_dd, A, state)
+        return flatten.unravel(spec, gflat, dtype=jnp.float32), state
+
+    # --------------------------------------------------------------------
+    def __repr__(self) -> str:  # registry listings / error messages
+        return f"{type(self).__name__}(name={self.name!r})"

@@ -1,0 +1,164 @@
+"""Registry adapters for the paper's five original schemes.
+
+Each class reproduces the exact arithmetic of the pre-registry code
+(the old ``core/aggregation.aggregate`` branches and the scalar collapse
+in ``fl/round._strategy_weights``) so the refactor is bit-identical on
+fixed tau draws — golden-tested in ``tests/test_strategies.py``.
+
+The old ``Aggregation.COLREL_FUSED`` enum value and the separate
+``RoundConfig.use_fused_kernel`` boolean expressed one choice through
+two APIs; both now collapse onto the ``fused`` execution option of the
+single ``colrel`` strategy:
+
+* ``fused=False``      — faithful two-stage path (Alg. 1 lines 8-11 +
+  Alg. 2 line 5): relay mix across the client axis, then the blind PS
+  sum, exercised per pytree leaf.
+* ``fused="collapse"`` (or ``True``) — exact scalar collapse onto the
+  effective weights ``w_j = sum_i tau_i tau_ji alpha_ij`` (the old
+  ``COLREL_FUSED``).
+* ``fused="kernel"``   — flatten-once fused Pallas aggregation: ravel
+  the update pytree into one ``(n, d)`` stack and stream it through the
+  mixing-mask + relay-mix + blind-sum kernel in a single HBM pass (the
+  old ``use_fused_kernel=True``).  Falls back to the plain contraction
+  under pjit so GSPMD can partition it (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatten
+from repro.core import relay as relay_ops
+from repro.strategies import registry
+from repro.strategies.base import AggregationStrategy, ExecutionContext, State
+
+__all__ = [
+    "ColRelStrategy",
+    "FedAvgPerfect",
+    "FedAvgBlind",
+    "FedAvgNonBlind",
+]
+
+_FUSED_MODES = (False, True, "collapse", "kernel")
+
+
+class ColRelStrategy(AggregationStrategy):
+    """The paper's collaborative relaying (Sec. II-C / Eq. (3))."""
+
+    name = "colrel"
+    needs_A = True
+    scalar_collapsible = True
+
+    def __init__(self, fused: "bool | str" = False):
+        if fused not in _FUSED_MODES:
+            raise ValueError(f"fused must be one of {_FUSED_MODES}, got {fused!r}")
+        self.fused = "collapse" if fused is True else fused
+
+    def weights(self, tau_up, tau_dd, A):
+        n = tau_up.shape[0]
+        t = tau_up.astype(jnp.float32)
+        w = relay_ops.effective_weights(
+            A.astype(jnp.float32), t, tau_dd.astype(jnp.float32)
+        )
+        return w / n
+
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State = ()):
+        delta = relay_ops.colrel_round_delta(
+            updates, A, tau_up, tau_dd, fused=bool(self.fused)
+        )
+        return delta, state
+
+    def aggregate_tree(self, deltas, tau_up, tau_dd, A, state, ctx: ExecutionContext):
+        if self.fused == "kernel":
+            # flatten-once fused path: ravel the update pytree into a
+            # single contiguous (n, d) stack, stream it through the fused
+            # aggregation exactly once (mask + relay mix + blind PS sum,
+            # fp32 accumulation), unravel the (d,) delta.
+            spec = flatten.flat_spec(deltas, stacked=True)
+            stack = flatten.ravel_stacked(deltas, dtype=ctx.flat_dtype)
+            if ctx.spmd_axes:
+                # Sharded execution: express the pass as a plain
+                # contraction so GSPMD partitions it (per-shard partial
+                # products + one (d,) all-reduce).  An opaque pallas call
+                # has no partitioning rule — it would be replicated,
+                # gathering the full stack onto every chip.
+                gflat = self.weights(tau_up, tau_dd, A) @ stack.astype(jnp.float32)
+            else:
+                from repro.kernels import ops as kernel_ops
+
+                gflat = kernel_ops.fused_aggregate(
+                    A, tau_up, tau_dd, stack, block_d=ctx.fused_block_d
+                )
+            return flatten.unravel(spec, gflat, dtype=jnp.float32), state
+        if self.fused:  # "collapse": leaf-wise scalar weighting
+            return super().aggregate_tree(deltas, tau_up, tau_dd, A, state, ctx)
+        # faithful two-stage path: relay mix across the client axis, then
+        # the blind PS sum — exercised leaf-wise.
+        M = relay_ops.mixing_matrix(A.astype(jnp.float32), tau_dd.astype(jnp.float32))
+        t = tau_up.astype(jnp.float32)
+        gdelta = jax.tree.map(
+            lambda D: jnp.tensordot(t, jnp.tensordot(M, D, axes=1), axes=1)
+            / ctx.n_clients,
+            deltas,
+        )
+        return gdelta, state
+
+
+class FedAvgPerfect(AggregationStrategy):
+    """Upper bound: everyone always arrives."""
+
+    name = "fedavg_perfect"
+    scalar_collapsible = True
+
+    def weights(self, tau_up, tau_dd, A):
+        n = tau_up.shape[0]
+        return jnp.ones((n,), jnp.float32) / n
+
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State = ()):
+        return jnp.mean(updates, axis=0), state
+
+
+class FedAvgBlind(AggregationStrategy):
+    """Sum of arrivals / n (OAC-style); biased whenever p_i < 1."""
+
+    name = "fedavg_blind"
+    scalar_collapsible = True
+
+    def weights(self, tau_up, tau_dd, A):
+        return tau_up.astype(jnp.float32) / tau_up.shape[0]
+
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State = ()):
+        t = tau_up.astype(updates.dtype)
+        return (t @ updates) / updates.shape[0], state
+
+
+class FedAvgNonBlind(AggregationStrategy):
+    """Sum of arrivals / #arrivals."""
+
+    name = "fedavg_nonblind"
+    scalar_collapsible = True
+
+    def weights(self, tau_up, tau_dd, A):
+        t = tau_up.astype(jnp.float32)
+        return t / jnp.maximum(jnp.sum(t), 1.0)
+
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State = ()):
+        t = tau_up.astype(updates.dtype)
+        k = jnp.maximum(jnp.sum(t), 1.0)
+        return (t @ updates) / k, state
+
+
+registry.register("colrel", ColRelStrategy)
+registry.register("fedavg_perfect", FedAvgPerfect)
+registry.register("fedavg_blind", FedAvgBlind)
+registry.register("fedavg_nonblind", FedAvgNonBlind)
+registry.register_deprecated_alias(
+    "colrel_fused",
+    "colrel",
+    "Aggregation.COLREL_FUSED is deprecated; use "
+    "strategies.get('colrel', fused=True) instead",
+    fused="collapse",
+)

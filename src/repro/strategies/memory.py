@@ -1,0 +1,65 @@
+"""Memory-based implicit gossiping (Xiang et al., arXiv:2404.10091).
+
+When client ``i``'s uplink is blocked, plain FedAvg drops its update —
+biasing the round toward well-connected clients, catastrophically so
+under bursty (Gilbert–Elliott) blockage where the same clients vanish
+for many consecutive rounds.  The memory scheme instead carries a
+``(n, d)`` buffer of each client's *last successfully delivered*
+consensus: a blocked link replays the stale contribution, so every
+client enters every PS average with weight exactly ``1/n`` — fresh when
+the link is up, remembered when it is down.  This is the implicit-
+gossip debias: no ``1/p`` importance scaling, no oracle link knowledge.
+
+Round recursion (PS-side):
+
+    tilde   = (A * tau_dd^T) @ updates          # ColRel D2D consensus
+    contrib = tau_up * tilde + (1 - tau_up) * buffer
+    delta   = (1/n) sum_i contrib_i
+    buffer' = contrib                            # updates only on arrival
+
+With every link up (``tau ≡ 1``) the buffer is never consulted and the
+round is exactly ColRel.  With ``A = I`` (no relaying) it is the pure
+memory-FedAvg of the source paper.  The buffer is shape-stable
+``(n, d)`` fp32 state threaded through the compiled round — taus change
+every round without recompiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import relay as relay_ops
+from repro.strategies import registry
+from repro.strategies.base import AggregationStrategy, State
+
+__all__ = ["MemoryStrategy"]
+
+
+class MemoryStrategy(AggregationStrategy):
+    """Implicit gossip: blocked links replay the last received update."""
+
+    name = "memory"
+    needs_A = True
+    scalar_collapsible = False  # stale replay cannot collapse to weights
+    stateful = True
+
+    def init_state(self, n: int, d: int) -> jax.Array:
+        # zeros: a client blocked since round 0 contributes nothing until
+        # its first successful delivery (equivalent to blind for that
+        # client's cold start), then is always represented.
+        return jnp.zeros((n, d), jnp.float32)
+
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State):
+        n = updates.shape[0]
+        x = updates.astype(jnp.float32)
+        tilde = relay_ops.relay_mix(
+            x, A.astype(jnp.float32), tau_dd.astype(jnp.float32)
+        )
+        t = tau_up.astype(jnp.float32)[:, None]
+        contrib = t * tilde + (1.0 - t) * state
+        delta = jnp.ones((n,), jnp.float32) @ contrib / n
+        return delta, contrib
+
+
+registry.register("memory", MemoryStrategy)

@@ -1,0 +1,134 @@
+"""FedDec-style multi-hop relaying (Costantini et al., arXiv:2306.06715).
+
+ColRel gives every update one D2D broadcast slot before the uplink; with
+K relay slots an update can travel K hops, so clients with no direct
+path to a well-connected relay still reach the PS through intermediate
+neighbors.  Each hop re-applies the round's realized masked mixing
+matrix ``M = A * tau_dd^T`` (block realizations persist across the
+round's K broadcast slots — the channel-coherence-time assumption; the
+``hop_mixing`` hook is where per-slot re-draws would plug in), so the
+consensus the PS hears is ``tau_up @ M^K @ updates``.
+
+Because every hop is linear, the K-hop scheme still collapses exactly
+onto per-client scalar weights ``w = tau_up @ M^K`` — the strategy
+implements both the multi-stage dense-stack path and the scalar fast
+path, and at K=1 it is bit-identical to ``colrel``.
+
+Unbiasedness correction: COPT-alpha's condition (5) makes the *one-hop*
+expected weight ``E[w_j] = 1``; after K hops that no longer holds
+(weights compound through intermediate links).  ``calibrate`` estimates
+``c_j = E[(tau_up @ M^K)_j]`` by Monte Carlo over the link model and
+rescales each source client by ``1 / (n c_j)``, restoring
+``E[w_j] = 1/n`` per client — the K-hop analogue of (5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import relay as relay_ops
+from repro.core.connectivity import LinkModel, sample_rounds
+from repro.strategies import registry
+from repro.strategies.base import AggregationStrategy, State
+
+__all__ = ["MultiHopStrategy", "multihop_correction"]
+
+
+def multihop_correction(
+    model: LinkModel,
+    A: np.ndarray,
+    hops: int,
+    *,
+    draws: int = 4096,
+    seed: int = 0,
+) -> np.ndarray:
+    """Monte-Carlo estimate of ``c_j = E[(tau_up @ M^K)_j]`` (n,).
+
+    Host-side numpy; deterministic for a fixed seed.  Clients whose
+    expected weight is ~0 (unreachable through any K-hop path) keep
+    ``c_j = 1`` — no rescaling can make an unreachable client unbiased.
+    """
+    A = np.asarray(A, np.float64)
+    rng = np.random.default_rng(seed)
+    ups, dds = sample_rounds(model, rng, draws)  # (R, n), (R, n, n)
+    M = A[None] * np.swapaxes(dds, 1, 2)  # (R, n, n) realized mixing
+    w = ups
+    for _ in range(int(hops)):
+        w = np.einsum("ri,rij->rj", w, M)
+    c = w.mean(axis=0)
+    return np.where(c > 1e-6, c, 1.0)
+
+
+class MultiHopStrategy(AggregationStrategy):
+    """K-hop relay mixing with optional unbiasedness correction."""
+
+    name = "multihop"
+    needs_A = True
+    scalar_collapsible = True
+
+    def __init__(self, hops: int = 2, correction=None):
+        if int(hops) < 1:
+            raise ValueError(f"hops must be >= 1, got {hops}")
+        self.hops = int(hops)
+        # (n,) Monte-Carlo E[tau_up @ M^K]; None = uncorrected
+        self.correction = (
+            None if correction is None else jnp.asarray(correction, jnp.float32)
+        )
+
+    @property
+    def calibration_tracks_A(self) -> bool:
+        # the correction is E[tau @ M^K] for one specific alpha; it is a
+        # baked closure constant of the compiled round, so an adaptive
+        # A-swap would silently leave it stale (re-calibration through
+        # carried state is a ROADMAP follow-on)
+        return self.correction is not None
+
+    def calibrate(self, model: LinkModel, A) -> "MultiHopStrategy":
+        if self.correction is not None:
+            return self
+        return MultiHopStrategy(
+            self.hops, correction=multihop_correction(model, A, self.hops)
+        )
+
+    # ------------------------------------------------------------------
+    def hop_mixing(self, k: int, M: jax.Array, tau_dd: jax.Array) -> jax.Array:
+        """Mixing matrix applied at hop ``k`` (0-indexed).  The default
+        reuses the round's realized mask every slot; subclasses can
+        re-mask per hop when per-slot tau draws are available."""
+        del k, tau_dd
+        return M
+
+    def _source_scale(self, n: int) -> jax.Array:
+        if self.correction is None:
+            return jnp.full((n,), 1.0 / n, jnp.float32)
+        return 1.0 / (n * self.correction)
+
+    def weights(self, tau_up, tau_dd, A):
+        n = tau_up.shape[0]
+        t = tau_up.astype(jnp.float32)
+        Af = A.astype(jnp.float32)
+        td = tau_dd.astype(jnp.float32)
+        # hop 1 via the shared effective-weights contraction: at K=1 this
+        # is bit-identical to the colrel scalar collapse.
+        w = relay_ops.effective_weights(Af, t, td)
+        M = relay_ops.mixing_matrix(Af, td)
+        for k in range(1, self.hops):
+            w = w @ self.hop_mixing(k, M, td)
+        return w * self._source_scale(n)
+
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State = ()):
+        """Multi-stage dense-stack path: K successive relay broadcasts
+        over the realized links, then the blind PS sum."""
+        n = updates.shape[0]
+        x = updates.astype(jnp.float32) * self._source_scale(n)[:, None]
+        M = relay_ops.mixing_matrix(
+            A.astype(jnp.float32), tau_dd.astype(jnp.float32)
+        )
+        for k in range(self.hops):
+            x = self.hop_mixing(k, M, tau_dd) @ x  # broadcast slot k
+        return tau_up.astype(jnp.float32) @ x, state
+
+
+registry.register("multihop", MultiHopStrategy)

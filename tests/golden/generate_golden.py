@@ -1,0 +1,126 @@
+"""Golden-fixture generator for the aggregation-strategy refactor.
+
+Run once against the PRE-refactor round implementation (the closed
+``Aggregation`` enum dispatched inside ``fl/round.py``) to freeze the
+exact round outputs for every (strategy, execution-mode) pair on fixed
+tau draws:
+
+    PYTHONPATH=src python tests/golden/generate_golden.py
+
+``tests/test_strategies.py`` replays the identical experiment through
+the registry-driven round and asserts bit-identical parameters, so any
+numerical drift introduced by the strategy API is a test failure, not a
+silent trajectory change.  The fixture (``round_golden.npz``) is
+committed; this script is provenance + the regeneration recipe.
+"""
+
+import os
+
+import numpy as np
+
+# Golden fixtures are CPU artifacts: force determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology
+from repro.core.connectivity import sample_round
+from repro.fl.round import RoundConfig, make_round_fn
+from repro.optim import sgd, sgd_momentum
+
+N, DX, ROUNDS = 6, 8, 2
+STRATEGIES = [
+    "colrel", "colrel_fused", "fedavg_perfect", "fedavg_blind", "fedavg_nonblind",
+]
+MODES = ["per_client", "client_sequential", "weighted_grad"]
+
+
+def problem():
+    rng = np.random.default_rng(1234)
+    H = rng.normal(size=(DX, DX))
+    H = H @ H.T / DX + np.eye(DX)
+    centers = rng.normal(size=(N, DX))
+    Wc = rng.normal(size=(3, 4))
+    model = topology.fully_connected(N, 0.5, p_c=0.7, rho=0.5)
+    A = np.abs(rng.normal(size=(N, N))) + np.eye(N)
+    return H, centers, Wc, model, A
+
+
+def make_loss(H, Wc):
+    Hj = jnp.asarray(H, jnp.float32)
+    Wcj = jnp.asarray(Wc, jnp.float32)
+
+    def loss_fn(params, batch):
+        d = params["x"] - batch["center"][0]
+        quad = 0.5 * d @ (Hj @ d) + 0.1 * batch["noise"][0] @ params["x"]
+        wterm = 0.5 * jnp.sum((params["W"] - Wcj) ** 2)
+        wterm = wterm + 0.1 * jnp.sum(batch["noise_w"][0] * params["W"])
+        return quad + wterm, {}
+
+    return loss_fn
+
+
+def batches_for(rng, T):
+    """(n, T, B=1, ...) stacked local-step batches, deterministic."""
+    H, centers, _, _, _ = PROB
+    return {
+        "center": np.tile(centers[:, None, None, :], (1, T, 1, 1)).astype(np.float32),
+        "noise": rng.normal(size=(N, T, 1, DX)).astype(np.float32),
+        "noise_w": rng.normal(size=(N, T, 1, 3, 4)).astype(np.float32),
+    }
+
+
+PROB = problem()
+
+
+def run_config(strategy, mode, *, use_fused_kernel=False):
+    """Replay one (strategy, mode) config through the current round
+    implementation.  Originally run at the pre-refactor commit (enum
+    dispatch, no agg_state) to produce the frozen fixture; now exercises
+    the registry-driven round so the golden test replays it exactly."""
+    H, centers, Wc, model, A = PROB
+    T = 1 if mode == "weighted_grad" else 2
+    rc_kwargs = dict(n_clients=N, local_steps=T, mode=mode, aggregation=strategy)
+    if use_fused_kernel:
+        rc_kwargs["use_fused_kernel"] = True
+    rc = RoundConfig(**rc_kwargs)
+    server_opt = sgd_momentum(1.0, beta=0.9)
+    fn = jax.jit(make_round_fn(make_loss(H, Wc), sgd(0.05), server_opt, rc))
+
+    params = {"x": jnp.zeros(DX, jnp.float32), "W": jnp.zeros((3, 4), jnp.float32)}
+    sstate = server_opt.init(params)
+    agg_state = rc.resolve_strategy().init_state(N, DX + 12)
+    tau_rng = np.random.default_rng(77)
+    bat_rng = np.random.default_rng(99)
+    metrics = None
+    for _ in range(ROUNDS):
+        tau_up, tau_dd = sample_round(model, tau_rng)
+        b = batches_for(bat_rng, T)
+        if mode == "weighted_grad":
+            b = {k: v[:, 0] for k, v in b.items()}
+        out = fn(params, sstate, agg_state, jax.tree.map(jnp.asarray, b),
+                 jnp.asarray(tau_up, jnp.float32), jnp.asarray(tau_dd, jnp.float32),
+                 jnp.asarray(A, jnp.float32))
+        params, sstate, agg_state, metrics = out[0], out[1], out[2], out[-1]
+    return params, metrics
+
+
+def main():
+    out = {}
+    configs = [(s, m, False) for s in STRATEGIES for m in MODES]
+    configs.append(("colrel", "per_client", True))
+    for strategy, mode, fused_kernel in configs:
+        params, metrics = run_config(strategy, mode, use_fused_kernel=fused_kernel)
+        tag = f"{strategy}|{mode}" + ("|kernel" if fused_kernel else "")
+        out[f"{tag}|x"] = np.asarray(params["x"], np.float32)
+        out[f"{tag}|W"] = np.asarray(params["W"], np.float32)
+        out[f"{tag}|weight_sum"] = np.float32(metrics["weight_sum"])
+        print(f"{tag:40s} |x|={np.linalg.norm(out[f'{tag}|x']):.6f}")
+    path = os.path.join(os.path.dirname(__file__), "round_golden.npz")
+    np.savez(path, **out)
+    print(f"wrote {path} ({len(out)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

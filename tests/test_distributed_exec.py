@@ -59,18 +59,18 @@ SCRIPT = textwrap.dedent(
                 bsh = shard_rules.train_batch_shardings(mesh, "per_client",
                                                         jax.eval_shape(lambda: batches))
                 rep = NamedSharding(mesh, P())
-                fn = jax.jit(fn, in_shardings=(psh, psh_state(psh), bsh, rep, rep, rep))
-                return fn(params, server.init(params), batches, *args)
-        return jax.jit(fn)(params, server.init(params), batches, *args)
+                fn = jax.jit(fn, in_shardings=(psh, psh_state(psh), (), bsh, rep, rep, rep))
+                return fn(params, server.init(params), (), batches, *args)
+        return jax.jit(fn)(params, server.init(params), (), batches, *args)
 
     def psh_state(psh):
         # server momentum state mirrors params + a replicated step counter
         return {"step": NamedSharding(mesh, P()), "m": psh}
 
-    p_ref, _, met_ref = run(False, Aggregation.COLREL)
-    p_dist, _, met_dist = run(True, Aggregation.COLREL)
-    p_fused, _, _ = run(True, Aggregation.COLREL_FUSED)
-    p_flat, _, _ = run(True, Aggregation.COLREL, fused_kernel=True)
+    p_ref, _, _, met_ref = run(False, Aggregation.COLREL)
+    p_dist, _, _, met_dist = run(True, Aggregation.COLREL)
+    p_fused, _, _, _ = run(True, Aggregation.COLREL_FUSED)
+    p_flat, _, _, _ = run(True, Aggregation.COLREL, fused_kernel=True)
 
     for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_dist)):
         np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),

@@ -149,9 +149,9 @@ def test_weighted_flat_equals_weighted_grad():
         else:
             batches = {"tokens": jnp.asarray(toks[..., :-1]).reshape(n * B, S),
                        "labels": jnp.asarray(toks[..., 1:]).reshape(n * B, S)}
-        p2, _, _ = fn(params, server.init(params),
-                      batches, jnp.asarray(tu, jnp.float32),
-                      jnp.asarray(td, jnp.float32), A)
+        p2, _, _, _ = fn(params, server.init(params), (),
+                         batches, jnp.asarray(tu, jnp.float32),
+                         jnp.asarray(td, jnp.float32), A)
         out[mode] = p2
     for a, b in zip(jax.tree.leaves(out["weighted_grad"]),
                     jax.tree.leaves(out["weighted_flat"])):

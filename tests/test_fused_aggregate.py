@@ -173,9 +173,9 @@ def test_round_fused_kernel_matches_per_leaf_path():
                          aggregation=Aggregation.COLREL, use_fused_kernel=fused,
                          fused_block_d=128)
         fn = jax.jit(make_round_fn(loss2, sgd(0.05), server, rc))
-        p2, _, metrics = fn(params, server.init(params), batches,
-                            jnp.asarray(tu, jnp.float32),
-                            jnp.asarray(td, jnp.float32), A)
+        p2, _, _, metrics = fn(params, server.init(params), (), batches,
+                               jnp.asarray(tu, jnp.float32),
+                               jnp.asarray(td, jnp.float32), A)
         out[fused] = (p2, metrics)
     for a, b in zip(jax.tree.leaves(out[False][0]), jax.tree.leaves(out[True][0])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-6)
@@ -207,7 +207,7 @@ def test_round_config_flat_dtype_bf16_close_to_f32():
                          aggregation=Aggregation.COLREL, use_fused_kernel=True,
                          flat_dtype=flat_dtype, fused_block_d=128)
         fn = jax.jit(make_round_fn(loss_fn, sgd(0.1), server, rc))
-        p2, _, _ = fn(params, server.init(params), batches,
-                      jnp.asarray(tu, jnp.float32), jnp.asarray(td, jnp.float32), A)
+        p2, _, _, _ = fn(params, server.init(params), (), batches,
+                         jnp.asarray(tu, jnp.float32), jnp.asarray(td, jnp.float32), A)
         got[flat_dtype] = np.asarray(p2["x"])
     np.testing.assert_allclose(got["bfloat16"], got["float32"], atol=5e-3, rtol=5e-2)

@@ -1,0 +1,438 @@
+"""The pluggable AggregationStrategy API.
+
+Four layers:
+  1. golden equivalence — every registry strategy that adapts an old
+     ``Aggregation`` enum value produces bit-identical round outputs to
+     the pre-refactor implementation (frozen fixture in
+     ``tests/golden/round_golden.npz``) on fixed tau draws, across
+     per_client / client_sequential / weighted_grad modes;
+  2. registry mechanics — deprecated aliases warn and forward, custom
+     strategies register and run, invalid combinations fail loudly;
+  3. the two beyond-enum strategies — multihop K=1 reduces exactly to
+     colrel, memory with no blockages reduces exactly to colrel, memory
+     state round-trips through jax.jit without recompiles as taus
+     change;
+  4. the declarative ExperimentSpec assembly.
+"""
+
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import strategies
+from repro.core import Aggregation, aggregate, fedavg_weights, optimize_weights, topology
+from repro.core.connectivity import sample_round
+from repro.fl import ExperimentSpec, build_experiment
+from repro.fl.round import RoundConfig, make_round_fn
+from repro.optim import sgd, sgd_momentum
+
+# the golden generator doubles as the replay harness (same problem, same
+# seeds, same round loop — see its docstring for provenance)
+_GG_PATH = pathlib.Path(__file__).parent / "golden" / "generate_golden.py"
+_spec = importlib.util.spec_from_file_location("_golden_gen", _GG_PATH)
+gg = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(gg)
+
+GOLDEN = np.load(pathlib.Path(__file__).parent / "golden" / "round_golden.npz")
+
+LEGACY_CONFIGS = [(s, m, False) for s in gg.STRATEGIES for m in gg.MODES]
+LEGACY_CONFIGS.append(("colrel", "per_client", True))
+
+
+# ---------------------------------------------------------------------------
+# 1. golden equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy,mode,fused_kernel", LEGACY_CONFIGS,
+                         ids=[f"{s}-{m}{'-kernel' if k else ''}"
+                              for s, m, k in LEGACY_CONFIGS])
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_registry_round_bit_identical_to_legacy(strategy, mode, fused_kernel):
+    params, metrics = gg.run_config(strategy, mode, use_fused_kernel=fused_kernel)
+    tag = f"{strategy}|{mode}" + ("|kernel" if fused_kernel else "")
+    np.testing.assert_array_equal(np.asarray(params["x"], np.float32),
+                                  GOLDEN[f"{tag}|x"])
+    np.testing.assert_array_equal(np.asarray(params["W"], np.float32),
+                                  GOLDEN[f"{tag}|W"])
+    np.testing.assert_array_equal(np.float32(metrics["weight_sum"]),
+                                  GOLDEN[f"{tag}|weight_sum"])
+
+
+def test_all_legacy_enum_values_resolve():
+    import warnings
+
+    for agg in Aggregation:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            s = strategies.resolve(agg)
+        assert isinstance(s, strategies.AggregationStrategy)
+        assert s.name in strategies.available()
+        deprecated = [w for w in caught if w.category is DeprecationWarning]
+        assert bool(deprecated) == (agg == Aggregation.COLREL_FUSED)
+
+
+# ---------------------------------------------------------------------------
+# 2. registry mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_available_lists_builtins_without_deprecated():
+    names = strategies.available()
+    assert {"colrel", "fedavg_perfect", "fedavg_blind", "fedavg_nonblind",
+            "multihop", "memory"} <= set(names)
+    assert "colrel_fused" not in names
+    assert "colrel_fused" in strategies.available(include_deprecated=True)
+
+
+def test_deprecated_alias_warns_and_forwards():
+    with pytest.warns(DeprecationWarning, match="COLREL_FUSED"):
+        s = strategies.get("colrel_fused")
+    assert isinstance(s, strategies.ColRelStrategy) and s.fused == "collapse"
+
+
+def test_use_fused_kernel_warns_and_forwards():
+    with pytest.warns(DeprecationWarning, match="use_fused_kernel"):
+        s = strategies.resolve("colrel", fused_kernel=True)
+    assert isinstance(s, strategies.ColRelStrategy) and s.fused == "kernel"
+    with pytest.raises(ValueError, match="use_fused_kernel"):
+        strategies.resolve("fedavg_blind", fused_kernel=True)
+
+
+def test_unknown_strategy_fails_loudly():
+    with pytest.raises(KeyError, match="unknown aggregation strategy"):
+        strategies.get("does_not_exist")
+    with pytest.raises(KeyError):
+        RoundConfig(n_clients=2, local_steps=1, aggregation="does_not_exist")
+
+
+def test_custom_registered_strategy_runs_in_round():
+    """Openness proof at the unit level: a never-seen scheme registered
+    from outside the package runs through the round machinery."""
+
+    @strategies.register("half_arrivals", overwrite=True)
+    class HalfArrivals(strategies.AggregationStrategy):
+        name = "half_arrivals"
+        scalar_collapsible = True
+
+        def weights(self, tau_up, tau_dd, A):
+            return tau_up.astype(jnp.float32) / (2.0 * tau_up.shape[0])
+
+    assert "half_arrivals" in strategies.available()
+    params, _ = gg.run_config("half_arrivals", "per_client")
+    assert np.isfinite(np.asarray(params["x"])).all()
+
+
+def test_stateful_strategy_rejected_outside_per_client():
+    rc = RoundConfig(n_clients=4, local_steps=1, mode="client_sequential",
+                     aggregation="memory")
+    with pytest.raises(ValueError, match="per_client mode"):
+        make_round_fn(lambda p, b: (0.0, {}), sgd(0.1), sgd_momentum(1.0), rc)
+
+    # stateful-but-collapsible is rejected too: the scalar-only modes
+    # would silently freeze the carried state at init_state
+    class StatefulCollapsible(strategies.AggregationStrategy):
+        name = "stateful_collapsible"
+        scalar_collapsible = True
+        stateful = True
+
+        def weights(self, tau_up, tau_dd, A):
+            return tau_up.astype(jnp.float32) / tau_up.shape[0]
+
+    rc2 = RoundConfig(n_clients=4, local_steps=1, mode="weighted_grad",
+                      aggregation=StatefulCollapsible())
+    with pytest.raises(ValueError, match="per_client mode"):
+        make_round_fn(lambda p, b: (0.0, {}), sgd(0.1), sgd_momentum(1.0), rc2)
+
+
+def test_core_aggregate_delegates_through_registry():
+    rng = np.random.default_rng(0)
+    n, d = 6, 11
+    upd = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    m = topology.fully_connected(n, 0.5, p_c=0.7)
+    tu, td = sample_round(m, rng)
+    tu, td = jnp.asarray(tu, jnp.float32), jnp.asarray(td, jnp.float32)
+    A = jnp.asarray(np.abs(rng.normal(size=(n, n))), jnp.float32)
+
+    from repro.core import relay
+
+    np.testing.assert_array_equal(
+        np.asarray(aggregate("colrel", upd, tau_up=tu, tau_dd=td, A=A)),
+        np.asarray(relay.colrel_round_delta(upd, A, tu, td)))
+    np.testing.assert_array_equal(
+        np.asarray(aggregate("fedavg_blind", upd, tau_up=tu)),
+        np.asarray((tu @ upd) / n))
+    with pytest.raises(ValueError, match="needs A and tau_dd"):
+        aggregate("colrel", upd, tau_up=tu)
+
+
+# ---------------------------------------------------------------------------
+# 3a. multihop
+# ---------------------------------------------------------------------------
+
+
+def _round_harness(strategy, taus, *, rounds=3):
+    """Run ``rounds`` rounds of the golden problem under explicit taus."""
+    H, centers, Wc, model, A = gg.PROB
+    rc = RoundConfig(n_clients=gg.N, local_steps=2, mode="per_client",
+                     aggregation=strategy)
+    server_opt = sgd_momentum(1.0, beta=0.9)
+    fn = jax.jit(make_round_fn(gg.make_loss(H, Wc), sgd(0.05), server_opt, rc))
+    params = {"x": jnp.zeros(gg.DX, jnp.float32),
+              "W": jnp.zeros((3, 4), jnp.float32)}
+    sstate = server_opt.init(params)
+    st = rc.resolve_strategy().init_state(gg.N, gg.DX + 12)
+    bat_rng = np.random.default_rng(5)
+    for r in range(rounds):
+        tu, td = taus(r)
+        b = gg.batches_for(bat_rng, 2)
+        params, sstate, st, _ = fn(params, sstate, st,
+                                   jax.tree.map(jnp.asarray, b),
+                                   jnp.asarray(tu, jnp.float32),
+                                   jnp.asarray(td, jnp.float32),
+                                   jnp.asarray(gg.PROB[4], jnp.float32))
+    return params, st
+
+
+def _sampled_taus(seed=3):
+    model = gg.PROB[3]
+    rng = np.random.default_rng(seed)
+    draws = [sample_round(model, rng) for _ in range(8)]
+    return lambda r: draws[r]
+
+
+def test_multihop_k1_reduces_exactly_to_colrel():
+    taus = _sampled_taus()
+    p_hop, _ = _round_harness(strategies.get("multihop", hops=1), taus)
+    # identical scalar collapse -> bit-identical to colrel's fused path
+    p_col, _ = _round_harness(strategies.get("colrel", fused=True), taus)
+    for a, b in zip(jax.tree.leaves(p_hop), jax.tree.leaves(p_col)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and numerically equal to the faithful two-stage execution
+    p_faith, _ = _round_harness(strategies.get("colrel"), taus)
+    for a, b in zip(jax.tree.leaves(p_hop), jax.tree.leaves(p_faith)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_multihop_weights_match_matrix_power():
+    n = 8
+    m = topology.fully_connected(n, 0.5, p_c=0.6, rho=0.3)
+    rng = np.random.default_rng(2)
+    tu, td = sample_round(m, rng)
+    A = np.abs(rng.normal(size=(n, n))) * 0.3 + np.eye(n)
+    for K in (1, 2, 3):
+        s = strategies.get("multihop", hops=K)
+        got = np.asarray(s.weights(jnp.asarray(tu, jnp.float32),
+                                   jnp.asarray(td, jnp.float32),
+                                   jnp.asarray(A, jnp.float32)))
+        M = A * td.T
+        want = tu @ np.linalg.matrix_power(M, K) / n
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+        # the multi-stage dense path agrees with the scalar collapse
+        upd = jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)
+        delta, _ = s.aggregate(upd, jnp.asarray(tu, jnp.float32),
+                               jnp.asarray(td, jnp.float32),
+                               jnp.asarray(A, jnp.float32))
+        np.testing.assert_allclose(np.asarray(delta), got @ np.asarray(upd),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_multihop_calibration_restores_unbiasedness():
+    """COPT-alpha satisfies condition (5), so at K=1 the Monte-Carlo
+    correction is ~1; at K=2 it deviates, and dividing by it restores
+    E[sum w] = 1."""
+    m = topology.paper_fig2a()
+    res = optimize_weights(m, sweeps=15, fine_tune_sweeps=15)
+    c1 = strategies.multihop_correction(m, res.A, 1, draws=4096, seed=0)
+    np.testing.assert_allclose(c1, np.ones(m.n), atol=0.12)
+
+    s2 = strategies.get("multihop", hops=2).calibrate(m, res.A)
+    assert s2.correction is not None
+    # realized E[sum_j w_j] over fresh draws ~ 1 after correction
+    rng = np.random.default_rng(9)
+    tot = 0.0
+    R = 2000
+    for _ in range(R):
+        tu, td = sample_round(m, rng)
+        w = s2.weights(jnp.asarray(tu, jnp.float32), jnp.asarray(td, jnp.float32),
+                       jnp.asarray(res.A, jnp.float32))
+        tot += float(jnp.sum(w))
+    assert abs(tot / R - 1.0) < 0.1, tot / R
+
+
+# ---------------------------------------------------------------------------
+# 3b. memory
+# ---------------------------------------------------------------------------
+
+
+def test_memory_no_blockage_reduces_exactly_to_colrel():
+    n = gg.N
+    all_up = lambda r: (np.ones(n), np.ones((n, n)))
+    p_mem, buf = _round_harness(strategies.get("memory"), all_up)
+    p_col, _ = _round_harness(strategies.get("colrel"), all_up)
+    for a, b in zip(jax.tree.leaves(p_mem), jax.tree.leaves(p_col)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-7, rtol=1e-7)
+    assert np.isfinite(np.asarray(buf)).all()
+
+
+def test_memory_replays_last_received_update():
+    """Dense-level semantics: a blocked uplink contributes the client's
+    last successfully delivered consensus, not zero."""
+    s = strategies.get("memory")
+    n, d = 3, 2
+    A = jnp.eye(n)
+    ones_dd = jnp.ones((n, n))
+    buf = s.init_state(n, d)
+    u1 = jnp.asarray([[1.0, 0.0], [0.0, 2.0], [4.0, 4.0]])
+    # round 1: client 2 blocked -> contributes its zero-initialized slot
+    d1, buf = s.aggregate(u1, jnp.asarray([1.0, 1.0, 0.0]), ones_dd, A, buf)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray((u1[0] + u1[1]) / n))
+    u2 = jnp.asarray([[10.0, 10.0], [0.5, 0.5], [7.0, 7.0]])
+    # round 2: client 0 blocked -> replays u1[0]; client 2 now arrives
+    d2, buf = s.aggregate(u2, jnp.asarray([0.0, 1.0, 1.0]), ones_dd, A, buf)
+    np.testing.assert_allclose(np.asarray(d2),
+                               np.asarray((u1[0] + u2[1] + u2[2]) / n))
+    np.testing.assert_allclose(np.asarray(buf),
+                               np.asarray(jnp.stack([u1[0], u2[1], u2[2]])))
+
+
+def test_memory_state_jit_roundtrip_no_recompile():
+    """The (n, d) buffer threads through the compiled round; taus change
+    every call without retracing."""
+    traces = []
+    H, centers, Wc, model, A = gg.PROB
+    rc = RoundConfig(n_clients=gg.N, local_steps=2, aggregation="memory")
+    server_opt = sgd_momentum(1.0, beta=0.9)
+    base = make_round_fn(gg.make_loss(H, Wc), sgd(0.05), server_opt, rc)
+
+    def counted(*a):
+        traces.append(1)
+        return base(*a)
+
+    fn = jax.jit(counted)
+    params = {"x": jnp.zeros(gg.DX, jnp.float32),
+              "W": jnp.zeros((3, 4), jnp.float32)}
+    sstate = server_opt.init(params)
+    st = rc.resolve_strategy().init_state(gg.N, gg.DX + 12)
+    assert st.shape == (gg.N, gg.DX + 12)
+    taus = _sampled_taus(seed=11)
+    bat_rng = np.random.default_rng(6)
+    states = [np.asarray(st)]
+    for r in range(3):
+        tu, td = taus(r)
+        b = gg.batches_for(bat_rng, 2)
+        params, sstate, st, metrics = fn(
+            params, sstate, st, jax.tree.map(jnp.asarray, b),
+            jnp.asarray(tu, jnp.float32), jnp.asarray(td, jnp.float32),
+            jnp.asarray(A, jnp.float32))
+        states.append(np.asarray(st))
+    assert len(traces) == 1, f"retraced {len(traces)} times"
+    assert states[-1].shape == (gg.N, gg.DX + 12)
+    assert not np.array_equal(states[0], states[-1])
+    # no scalar collapse exists -> weight_sum logs as NaN by contract
+    assert np.isnan(float(metrics["weight_sum"]))
+
+
+# ---------------------------------------------------------------------------
+# 4. ExperimentSpec / build_experiment
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy,options", [
+    ("multihop", {"hops": 2}),
+    ("memory", {}),
+])
+def test_experiment_spec_runs_new_strategies_end_to_end(strategy, options):
+    spec = ExperimentSpec(model="quadratic", topology="fig2a",
+                          strategy=strategy, strategy_options=options,
+                          channel="markov", rounds=6, seed=0)
+    exp = build_experiment(spec)
+    assert exp.strategy.name == strategy
+    log = exp.run()
+    assert len(log.loss) == 6 and np.isfinite(log.loss).all()
+    if strategy == "multihop":
+        assert exp.strategy.correction is not None  # auto-calibrated
+        assert np.isfinite(np.asarray(log.weight_sums)).all()
+    if strategy == "memory":
+        assert exp.trainer.agg_state.shape[0] == exp.link_model.n
+
+
+def test_register_overwrite_clears_deprecated_alias():
+    strategies.register_deprecated_alias(
+        "tmp_alias_xyz", "fedavg_blind", "tmp_alias_xyz is deprecated")
+    with pytest.warns(DeprecationWarning):
+        assert isinstance(strategies.get("tmp_alias_xyz"),
+                          strategies.FedAvgBlind)
+
+    @strategies.register("tmp_alias_xyz", overwrite=True)
+    class TmpStrategy(strategies.AggregationStrategy):
+        name = "tmp_alias_xyz"
+        scalar_collapsible = True
+
+        def weights(self, tau_up, tau_dd, A):
+            return tau_up.astype(jnp.float32)
+
+    # the overwrite wins: no alias forwarding, no warning
+    assert isinstance(strategies.get("tmp_alias_xyz"), TmpStrategy)
+
+
+def test_adaptive_rejects_calibrated_multihop_and_skips_calibration():
+    # a calibrated multihop holds a correction baked against one alpha;
+    # the adaptive schedule swapping alpha mid-run must be refused
+    m = topology.paper_fig2a()
+    calibrated = strategies.get("multihop", hops=2).calibrate(m, np.eye(10))
+    assert calibrated.calibration_tracks_A
+    from repro.channel import AdaptiveConfig, AdaptiveWeightSchedule
+    from repro.fl import FLTrainer
+
+    sched = AdaptiveWeightSchedule(10, AdaptiveConfig(every=10, warmup=5))
+    with pytest.raises(ValueError, match="calibrated against a fixed alpha"):
+        FLTrainer(lambda p, b: (0.0, {}), {"x": jnp.zeros(2)}, m, np.eye(10),
+                  [None] * 10, sgd(0.1), sgd_momentum(1.0),
+                  strategy=calibrated, adaptive=sched)
+    # build_experiment therefore leaves multihop uncalibrated under
+    # adaptive (blind start alpha -> nothing meaningful to calibrate to)
+    spec = ExperimentSpec(model="quadratic", topology="fig2a",
+                          strategy="multihop", strategy_options={"hops": 2},
+                          adaptive=True, reopt_every=10, rounds=3)
+    exp = build_experiment(spec)
+    assert exp.strategy.correction is None
+    log = exp.run()
+    assert np.isfinite(log.loss).all()
+
+
+def test_experiment_spec_adaptive_guard_from_registry():
+    spec = ExperimentSpec(model="quadratic", topology="fig2a",
+                          strategy="fedavg_blind", adaptive=True)
+    with pytest.raises(ValueError, match="needs_A|ignores"):
+        build_experiment(spec)
+
+
+def test_experiment_spec_alpha_modes():
+    spec = ExperimentSpec(model="quadratic", topology="fig2a",
+                          strategy="colrel", copt_sweeps=5, rounds=2)
+    exp = build_experiment(spec)
+    assert exp.copt_result is not None  # auto -> copt for A-reading strategy
+    spec2 = spec.replace(strategy="fedavg_blind")
+    exp2 = build_experiment(spec2)
+    assert exp2.copt_result is None
+    np.testing.assert_array_equal(exp2.A, fedavg_weights(exp2.link_model.n))
+    # explicit array passes through
+    exp3 = build_experiment(spec.replace(alpha=np.eye(10)))
+    np.testing.assert_array_equal(exp3.A, np.eye(10))
+
+
+def test_trainer_rejects_both_strategy_spellings():
+    from repro.fl import FLTrainer
+
+    with pytest.raises(ValueError, match="not both"):
+        FLTrainer(lambda p, b: (0.0, {}), {"x": jnp.zeros(2)},
+                  topology.paper_fig2a(), np.eye(10), [None] * 10,
+                  sgd(0.1), sgd_momentum(1.0),
+                  strategy="colrel", aggregation="colrel")
