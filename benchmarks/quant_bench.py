@@ -1,0 +1,208 @@
+"""Quantized-relaying benchmark: variance vs bits against the Theorem 1 floor.
+
+Theorem 1 bounds the PS-update error by a floor proportional to the
+connectivity variance proxy ``S(p, P, A)`` — that floor exists even at
+infinite wire precision.  A wire codec adds *quantization* noise on
+top: unbiased codecs (int8 stochastic rounding, corrected rand-k) pay
+only variance, biased ones (top-k) trade variance for a systematic
+offset.  This benchmark traces exactly that decomposition under the
+bursty Gilbert–Elliott preset (``markov``: ~10-round blockage bursts,
+marginals equal to the static fig2a model):
+
+* hold one synthetic update stack ``x (n, d)`` fixed;
+* draw R rounds of (GE taus, fresh codec randomness) and aggregate
+  through ``quantized(colrel)`` for each arm;
+* report per-coordinate variance and the relative bias of the mean
+  delta against the unbiased target ``(1/n) Σ_i x_i``.
+
+The ``floor`` arm is unquantized colrel over the identical tau trace —
+the empirical Theorem 1 connectivity floor (annotated with the
+analytic ``S``).  Asserted invariants (the acceptance criteria):
+
+* int8 variance decreases monotonically in bits and approaches the
+  floor at 8 bits; int8 bias stays at the Monte-Carlo noise level
+  (unbiasedness of stochastic rounding through the relay mix);
+* corrected rand-k is unbiased while raw top-k is not (the descriptor
+  hook doing its job);
+* the fused Pallas dequant path matches the dequant-then-aggregate
+  oracle within fp32 contraction-order tolerance.
+
+Rows land in ``BENCH_quant.json`` via
+``python -m benchmarks.run --only quant --json BENCH_quant.json``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import strategies, wire
+from repro.configs import make_channel
+from repro.core import optimize_weights, topology, variance_S
+from repro.strategies.base import ExecutionContext
+
+from .common import Row
+
+ROUNDS = 320       # tau/codec draws per arm
+D = 4096           # flat update dimension
+CHANNEL = "markov"  # bursty GE preset (configs/channels.py)
+
+
+def _setup():
+    model = topology.paper_fig2a()
+    res = optimize_weights(model, sweeps=15, fine_tune_sweeps=15)
+    channel = make_channel(CHANNEL, model, seed=0)
+    taus = [channel.tau_for_round(r) for r in range(ROUNDS)]
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.normal(size=(model.n, D)), jnp.float32)
+    return model, res, taus, x
+
+
+def _arm_stats(strategy, taus, x, A):
+    """R aggregated deltas under the shared tau trace; one jit, state
+    threaded so stochastic codecs draw fresh randomness each round."""
+    n = x.shape[0]
+    state = strategy.init_state(n, D)
+    Aj = jnp.asarray(A, jnp.float32)
+    step = jax.jit(
+        lambda state, tu, td, A: strategy.aggregate(x, tu, td, A, state)
+    )
+    deltas = []
+    t0 = time.perf_counter()
+    for tu, td in taus:
+        delta, state = step(state, jnp.asarray(tu, jnp.float32),
+                            jnp.asarray(td, jnp.float32), Aj)
+        deltas.append(np.asarray(delta))
+    us = (time.perf_counter() - t0) / len(taus) * 1e6
+    deltas = np.stack(deltas)  # (R, d)
+    target = np.asarray(x).mean(axis=0)
+    var = float(deltas.var(axis=0).mean())
+    bias = float(np.linalg.norm(deltas.mean(axis=0) - target)
+                 / np.linalg.norm(target))
+    return us, var, bias, deltas.mean(axis=0)
+
+
+def _codec_bias(mean_arm: np.ndarray, mean_floor: np.ndarray,
+                x: np.ndarray) -> float:
+    """Codec-attributable bias: distance between the arm's mean delta
+    and the unquantized arm's mean over the *identical* tau trace, so
+    the (temporally correlated) connectivity Monte-Carlo error is
+    common-mode and cancels — what remains is wire bias plus the
+    codec's own i.i.d. Monte-Carlo noise."""
+    target_norm = float(np.linalg.norm(x.mean(axis=0)))
+    return float(np.linalg.norm(mean_arm - mean_floor)) / max(target_norm, 1e-12)
+
+
+def _mc_bias_tol(var_arm: float, var_floor: float, x: np.ndarray) -> float:
+    """Expected relative norm of the codec-noise Monte-Carlo error for
+    an unbiased arm: the codec adds ``var_arm - var_floor`` i.i.d.
+    per-coordinate variance, so E||mean err|| ≈ sqrt(d · Δvar / R)."""
+    dvar = max(var_arm - var_floor, 0.0)
+    target_norm = float(np.linalg.norm(x.mean(axis=0)))
+    return float(np.sqrt(x.shape[1] * dvar / ROUNDS)) / max(target_norm, 1e-12)
+
+
+def bench_quant() -> List[Row]:
+    rows: List[Row] = []
+    model, res, taus, x = _setup()
+    n = model.n
+    S = variance_S(model, res.A)
+
+    # -- the Theorem 1 connectivity floor: unquantized colrel ----------
+    us, var_floor, bias_floor, mean_floor = _arm_stats(
+        strategies.get("colrel"), taus, x, res.A)
+    rows.append((f"quant/floor_colrel_R{ROUNDS}", us,
+                 f"var={var_floor:.5f};bias={bias_floor:.4f};S={S:.2f}"))
+
+    # -- int8 stochastic rounding: variance vs bits --------------------
+    int8_var = {}
+    xs = np.asarray(x)
+    for bits in (2, 4, 6, 8):
+        s = strategies.get("quantized", codec="int8",
+                           codec_options={"bits": bits})
+        us, var, bias, mean = _arm_stats(s, taus, x, res.A)
+        int8_var[bits] = var
+        bpc = s.codec.descriptor(D).bits_per_coord
+        cbias = _codec_bias(mean, mean_floor, xs)
+        rows.append((f"quant/int8_b{bits}_R{ROUNDS}", us,
+                     f"bits={bpc:.2f};var={var:.5f};bias={bias:.4f};"
+                     f"codec_bias={cbias:.4f};"
+                     f"floor_ratio={var / var_floor:.3f}"))
+        # unbiased ⇒ the codec-attributable mean error is pure
+        # Monte-Carlo noise, E||err|| ≈ sqrt(d·Δvar/R); allow 3x
+        mc = _mc_bias_tol(var, var_floor, xs)
+        assert cbias < max(0.02, 3.0 * mc), (
+            f"int8 b={bits} biased: {cbias:.4f} vs MC noise {mc:.4f} "
+            "(stochastic rounding must stay unbiased through the relay mix)")
+
+    # monotone variance-vs-bits, converging onto the floor
+    assert int8_var[2] > int8_var[4] > int8_var[8], int8_var
+    assert int8_var[8] < 1.25 * var_floor, (
+        f"int8@8b variance {int8_var[8]:.5f} should sit on the floor "
+        f"{var_floor:.5f}")
+
+    # -- sparsification: biased top-k vs corrected rand-k --------------
+    topk_cbias = {}
+    for frac in (0.125, 0.25, 0.5):
+        s = strategies.get("quantized", codec="topk",
+                           codec_options={"fraction": frac})
+        us, var, bias, mean = _arm_stats(s, taus, x, res.A)
+        cbias = _codec_bias(mean, mean_floor, xs)
+        topk_cbias[frac] = cbias
+        bpc = s.codec.descriptor(D).bits_per_coord
+        rows.append((f"quant/topk_f{frac}_R{ROUNDS}", us,
+                     f"bits={bpc:.2f};var={var:.5f};bias={bias:.4f};"
+                     f"codec_bias={cbias:.4f};"
+                     f"floor_ratio={var / var_floor:.3f}"))
+
+    s_rand = strategies.get("quantized", codec="randk",
+                            codec_options={"fraction": 0.25})
+    us, var_rk, bias_rk, mean_rk = _arm_stats(s_rand, taus, x, res.A)
+    cbias_rk = _codec_bias(mean_rk, mean_floor, xs)
+    bpc = s_rand.codec.descriptor(D).bits_per_coord
+    rows.append((f"quant/randk_f0.25_R{ROUNDS}", us,
+                 f"bits={bpc:.2f};var={var_rk:.5f};bias={bias_rk:.4f};"
+                 f"codec_bias={cbias_rk:.4f};"
+                 f"floor_ratio={var_rk / var_floor:.3f}"))
+    # the descriptor hook restores unbiasedness for rand-k (gain k/d
+    # divided out): its codec bias is Monte-Carlo noise, while top-k at
+    # the same wire budget carries a systematic tail-loss offset
+    tol = _mc_bias_tol(var_rk, var_floor, xs)
+    assert cbias_rk < max(0.02, 3.0 * tol), (cbias_rk, tol)
+    assert topk_cbias[0.125] > cbias_rk, (
+        "deterministic top-k at 1/8 density should show the tail-loss "
+        f"bias the corrected rand-k lacks: {topk_cbias[0.125]:.4f} vs "
+        f"{cbias_rk:.4f}")
+
+    # -- fused Pallas dequant path vs the dequant oracle ---------------
+    tu, td = taus[0]
+    tuj = jnp.asarray(tu, jnp.float32)
+    tdj = jnp.asarray(td, jnp.float32)
+    Aj = jnp.asarray(res.A, jnp.float32)
+    ctx = ExecutionContext(n_clients=n)
+    deltas_tree = {"w": x}
+    s_fused = strategies.get("quantized", codec="int8", fused="kernel")
+    s_oracle = strategies.get("quantized", codec="int8")
+    st0 = s_fused.init_state(n, D)
+    fused_fn = jax.jit(
+        lambda st: s_fused.aggregate_tree(deltas_tree, tuj, tdj, Aj, st, ctx)
+    )
+    g_fused, _ = jax.block_until_ready(fused_fn(st0))  # warmup/compile
+    t0 = time.perf_counter()
+    repeat = 10
+    for _ in range(repeat):
+        jax.block_until_ready(fused_fn(st0))
+    us_f = (time.perf_counter() - t0) / repeat * 1e6
+    g_oracle, _ = s_oracle.aggregate_tree(deltas_tree, tuj, tdj, Aj, st0, ctx)
+    err = float(jnp.max(jnp.abs(g_fused["w"] - g_oracle["w"])))
+    scale_ref = float(jnp.max(jnp.abs(g_oracle["w"]))) + 1e-12
+    rows.append((f"quant/fused_vs_oracle_d{D}", us_f,
+                 f"max_err={err:.2e};rel={err / scale_ref:.2e}"))
+    assert err / scale_ref < 1e-4, (
+        f"fused dequant kernel drifted from the per-leaf oracle: {err:.2e}")
+
+    return rows

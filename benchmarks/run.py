@@ -23,6 +23,7 @@ def all_benches():
         channel_bench,
         kernels_bench,
         paper_figures,
+        quant_bench,
         roofline_report,
         strategy_bench,
         theory,
@@ -41,6 +42,7 @@ def all_benches():
         "channel_sampler": channel_bench.bench_channel_sampler,
         "channel_adaptive": channel_bench.bench_channel_adaptive,
         "strategies": strategy_bench.bench_strategy_matrix,
+        "quant": quant_bench.bench_quant,
     }
 
 

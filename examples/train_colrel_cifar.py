@@ -37,18 +37,50 @@ from repro.fl import TOPOLOGIES, ExperimentSpec, build_experiment
 
 
 def parse_opt(kv: str):
-    """key=value -> (key, typed value); bare ints/floats/bools decoded."""
-    key, _, raw = kv.partition("=")
-    if not _:
+    """``key=value`` -> ``(key, typed value)``.
+
+    Values are decoded, not passed through as bare strings: ints,
+    floats, ``true``/``false`` and ``none`` all arrive as their Python
+    types (strategy constructors like ``multihop(hops=3)`` take typed
+    arguments).  Dotted keys address nested option dicts — see
+    :func:`build_options`.
+    """
+    key, sep, raw = kv.partition("=")
+    if not sep:
         raise argparse.ArgumentTypeError(f"expected key=value, got {kv!r}")
     for cast in (int, float):
         try:
             return key, cast(raw)
         except ValueError:
             pass
-    if raw.lower() in ("true", "false"):
-        return key, raw.lower() == "true"
+    low = raw.lower()
+    if low in ("true", "false"):
+        return key, low == "true"
+    if low == "none":
+        return key, None
     return key, raw
+
+
+def build_options(pairs):
+    """``[(key, value), ...]`` -> kwargs dict, expanding dotted keys
+    into nested dicts: ``codec_options.bits=4`` becomes
+    ``{"codec_options": {"bits": 4}}`` (how the ``quantized`` strategy's
+    codec options are spelled on the command line)."""
+    out = {}
+    for key, value in pairs:
+        parts = key.split(".")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+            if not isinstance(node, dict):
+                raise SystemExit(f"--strategy-opt {key}: {p!r} is already "
+                                 "a scalar option")
+        leaf = parts[-1]
+        if isinstance(node.get(leaf), dict) and not isinstance(value, dict):
+            raise SystemExit(f"--strategy-opt {key}: {leaf!r} already holds "
+                             "nested options")
+        node[leaf] = value
+    return out
 
 
 def main():
@@ -58,8 +90,9 @@ def main():
                     choices=sorted(strategies.available()))
     ap.add_argument("--strategy-opt", action="append", default=[],
                     type=parse_opt, metavar="KEY=VALUE",
-                    help="strategy constructor option (repeatable), "
-                         "e.g. --strategy-opt hops=3")
+                    help="strategy constructor option (repeatable, typed, "
+                         "dotted keys nest), e.g. --strategy-opt hops=3 or "
+                         "--strategy-opt codec_options.bits=4")
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--non-iid-s", type=int, default=0, help="0 = IID")
     ap.add_argument("--channel", default="static", choices=sorted(CHANNEL_PRESETS),
@@ -74,10 +107,11 @@ def main():
     ap.add_argument("--out", default="colrel_cifar")
     args = ap.parse_args()
 
+    strategy_options = build_options(args.strategy_opt)
     if args.adaptive:
         # derive the guard from the registry, not a hardcoded name list:
         # adaptive re-optimizes alpha, which only A-reading strategies use
-        probe = strategies.get(args.strategy, **dict(args.strategy_opt))
+        probe = strategies.get(args.strategy, **strategy_options)
         if not probe.needs_A:
             raise SystemExit(
                 f"--adaptive re-optimizes the relay alpha, which "
@@ -91,7 +125,7 @@ def main():
         topology=args.topology,
         non_iid_s=args.non_iid_s,
         strategy=args.strategy,
-        strategy_options=dict(args.strategy_opt),
+        strategy_options=strategy_options,
         channel=args.channel,
         adaptive=args.adaptive,
         reopt_every=args.reopt_every,
@@ -106,7 +140,7 @@ def main():
     exp.run(eval_every=max(args.rounds // 10, 1), verbose=True)
 
     log = exp.log.to_dict()
-    log["config"] = {**vars(args), "strategy_opt": dict(args.strategy_opt)}
+    log["config"] = {**vars(args), "strategy_opt": strategy_options}
     with open(f"{args.out}.json", "w") as f:
         json.dump(log, f, indent=1)
     save_checkpoint(f"{args.out}.msgpack", exp.params)

@@ -1,13 +1,30 @@
 """Dynamic channel simulation: temporally-correlated outage traces,
 drifting geometry, online link estimation, adaptive consensus weights.
 
-One protocol — :class:`ChannelProcess` (``tau_for_round(r)`` /
-``model_for_round(r)``) — unifies the paper's i.i.d. model
-(:class:`StaticChannel`), Gilbert–Elliott bursty blockage
-(:class:`MarkovChannel`, scan-sampled on device), and waypoint mobility
-(:class:`MobilityChannel`).  :class:`AdaptiveWeightSchedule` +
+One protocol — :class:`ChannelProcess` (``tau_for_round(r)`` returns
+the realized ``(tau_up (n,), tau_dd (n, n))`` indicators the round
+consumes; ``model_for_round(r)`` the oracle marginals, for evaluation
+only) — unifies the paper's i.i.d. model (:class:`StaticChannel`),
+Gilbert–Elliott bursty blockage (:class:`MarkovChannel`, scan-sampled
+on device with the static model's marginals preserved exactly), and
+waypoint mobility (:class:`MobilityChannel`, geometry re-derived as
+clients move).  :class:`AdaptiveWeightSchedule` +
 :class:`LinkEstimator` replace oracle link knowledge with online
 estimates feeding periodic COPT-alpha re-optimization.
+
+Common entry points::
+
+    from repro.configs import make_channel          # named presets
+    ch = make_channel("markov", link_model, seed=0)
+    tau_up, tau_dd = ch.tau_for_round(r)
+
+    from repro.channel import AdaptiveConfig, AdaptiveWeightSchedule
+    sched = AdaptiveWeightSchedule(n, AdaptiveConfig(every=50))
+    trainer = FLTrainer(..., channel=ch, adaptive=sched)
+
+Preset names and tuning guidance live in ``repro/configs/channels.py``
+and ``docs/channel-presets.md``; the estimator/schedule design in
+DESIGN.md §5.
 """
 
 from .base import ChannelProcess, StaticChannel

@@ -71,7 +71,50 @@ TOPOLOGIES: Dict[str, Callable[[], LinkModel]] = {
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
-    """Everything that defines one federated experiment, declaratively."""
+    """Everything that defines one federated experiment, declaratively.
+
+    Task:
+        model: ``"cifar_cnn"`` (reduced ResNet-20 on synthetic CIFAR),
+            ``"cifar_cnn_full"`` (paper width), or ``"quadratic"`` (the
+            strongly-convex theory-check task; fast on CPU).
+        topology: named link topology (a key of :data:`TOPOLOGIES` —
+            ``"fig2a"``, ``"fig2b"``, ``"mmwave_int"``, ...) or an
+            explicit :class:`~repro.core.LinkModel`.
+        non_iid_s: 0 = IID data; otherwise the number of
+            sort-and-partition label shards per client (the paper's s).
+        data_size / eval_size: synthetic train / eval set sizes.
+
+    Protocol:
+        strategy: aggregation scheme — a registry name
+            (``strategies.available()``) or a constructed
+            :class:`~repro.strategies.AggregationStrategy`.
+        strategy_options: constructor kwargs for a named strategy,
+            e.g. ``{"hops": 2}`` for multihop or ``{"codec": "int8",
+            "codec_options": {"bits": 4}}`` for quantized.
+        alpha: relay weight matrix.  ``"auto"`` = COPT-alpha when the
+            strategy reads A and no adaptive schedule is attached, else
+            identity-scaled FedAvg weights; ``"copt"`` / ``"fedavg"`` /
+            ``"importance"`` force one; an explicit ``(n, n)`` array
+            passes through.
+        copt_sweeps: Gauss–Seidel sweeps for each COPT-alpha phase.
+        mode: round execution mode (``"per_client"``,
+            ``"client_sequential"``, ``"weighted_grad"``; DESIGN.md §3).
+        local_steps: the paper's T (None = model-kind default).
+        rounds: default round budget for :meth:`Experiment.run`.
+
+    Channel:
+        channel: dynamics preset name (``repro/configs/channels.py``:
+            ``"static"``, ``"markov"``, ``"mobility"``, ...).
+        adaptive: True = drop oracle link knowledge; estimate links
+            online and re-run COPT-alpha periodically.
+        reopt_every: adaptive re-optimization cadence in rounds.
+
+    Optimization (None = model-kind / paper defaults):
+        lr / weight_decay: client SGD hyperparameters.
+        server_momentum: PS momentum (the paper's global momentum).
+        batch_size: per-client batch size.
+        seed: single seed for data, partitioning, channel and model init.
+    """
 
     # -- task ----------------------------------------------------------
     model: str = "cifar_cnn"  # cifar_cnn | cifar_cnn_full | quadratic

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .fused_aggregate import fused_aggregate_pallas
+from .fused_dequant import fused_dequant_aggregate_pallas
+from .fused_memory import fused_memory_update_pallas
 from .relay_mix import relay_mix_pallas
 from .ssd_scan import ssd_scan_pallas
 
@@ -42,6 +44,46 @@ def fused_aggregate(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array,
              (A.astype(jnp.float32) * tau_dd.astype(jnp.float32).T)) / n
         return w @ updates.astype(jnp.float32)
     return fused_aggregate_pallas(A, tau_up, tau_dd, updates, block_d=block_d)
+
+
+def fused_dequant_aggregate(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array,
+                            q: jax.Array, scale: jax.Array, *,
+                            block_d: int = 2048) -> jax.Array:
+    """One-pass quantized ColRel PS delta over the int8 affine wire form:
+    the per-client dequant scales fold into the collapsed weight row
+    ((1/n) tau_up @ (A * tau_dd^T) * scale^T) @ q, so the int8 stack
+    crosses HBM once and the f32 stack is never materialized."""
+    if _interpret():
+        # Non-TPU deployable op: the identical folded contraction in jnp
+        # (same collapse order as the kernel); the kernel's tiling is
+        # validated in tests at reduced d.
+        n = q.shape[0]
+        w = (tau_up.astype(jnp.float32) @
+             (A.astype(jnp.float32) * tau_dd.astype(jnp.float32).T)) / n
+        return (w * scale.reshape(-1)) @ q.astype(jnp.float32)
+    return fused_dequant_aggregate_pallas(A, tau_up, tau_dd, q, scale,
+                                          block_d=block_d)
+
+
+def fused_memory_update(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array,
+                        updates: jax.Array, buffer: jax.Array, *,
+                        block_d: int = 2048):
+    """One-pass memory-strategy round (select-accumulate-update):
+    tilde = (A * tau_dd^T) @ updates; contrib = tau*tilde + (1-tau)*buffer;
+    returns (delta (d,), contrib (n, d)) with the (n, d) tilde intermediate
+    kept in VMEM (never written to HBM) on the kernel path."""
+    if _interpret():
+        # Non-TPU deployable op: same math and accumulation order as
+        # MemoryStrategy.aggregate (the oracle).
+        n = updates.shape[0]
+        m = A.astype(jnp.float32) * tau_dd.astype(jnp.float32).T
+        tilde = m @ updates.astype(jnp.float32)
+        t = tau_up.astype(jnp.float32)[:, None]
+        contrib = t * tilde + (1.0 - t) * buffer
+        delta = jnp.ones((n,), jnp.float32) @ contrib / n
+        return delta, contrib
+    return fused_memory_update_pallas(A, tau_up, tau_dd, updates, buffer,
+                                      block_d=block_d)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,

@@ -1,7 +1,8 @@
 """Open aggregation-strategy family (DESIGN.md §6).
 
 The paper's ColRel and its FedAvg baselines, FedDec-style multi-hop
-relaying, and memory-based implicit gossiping, all behind one protocol
+relaying, memory-based implicit gossiping, and codec-compressed
+quantized relaying (DESIGN.md §8), all behind one protocol
 (:class:`AggregationStrategy`) and a string-keyed registry::
 
     from repro import strategies
@@ -9,11 +10,13 @@ relaying, and memory-based implicit gossiping, all behind one protocol
     strategies.available()                   # what the CLI / benches see
     s = strategies.get("colrel", fused=True)
     s = strategies.get("multihop", hops=3)
+    s = strategies.get("quantized", codec="int8", inner="colrel")
 
-    @strategies.register("quantized")
-    class QuantizedRelay(strategies.AggregationStrategy): ...
+    @strategies.register("my_scheme")
+    class MyScheme(strategies.AggregationStrategy): ...
 
-Importing this package registers the built-in strategies.
+Importing this package registers the built-in strategies; the
+authoring guide is ``docs/strategy-authoring.md``.
 """
 
 from repro.strategies.base import AggregationStrategy, ExecutionContext
@@ -33,6 +36,7 @@ from repro.strategies.classic import (
 )
 from repro.strategies.multihop import MultiHopStrategy, multihop_correction
 from repro.strategies.memory import MemoryStrategy
+from repro.strategies.quantized import QuantizedStrategy
 
 __all__ = [
     "AggregationStrategy",
@@ -50,4 +54,5 @@ __all__ = [
     "MultiHopStrategy",
     "multihop_correction",
     "MemoryStrategy",
+    "QuantizedStrategy",
 ]

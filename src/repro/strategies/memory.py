@@ -22,6 +22,15 @@ round is exactly ColRel.  With ``A = I`` (no relaying) it is the pure
 memory-FedAvg of the source paper.  The buffer is shape-stable
 ``(n, d)`` fp32 state threaded through the compiled round — taus change
 every round without recompiling.
+
+Execution: ``fused=False`` (default) is the faithful jnp path —
+relay mix, select, accumulate as separate ops (the oracle).
+``fused="kernel"`` gives the recursion the flatten-once kernel
+treatment (``kernels/fused_memory.py``): one Pallas grid pass reads the
+update stack and the replay buffer tile-by-tile, keeps the ``tilde``
+consensus intermediate in VMEM, and writes only the ``(d,)`` delta and
+the new buffer — keyed off ``aggregate_tree``'s ExecutionContext like
+colrel's fused path, with the same pjit fallback (DESIGN.md §2/§8).
 """
 
 from __future__ import annotations
@@ -29,11 +38,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import flatten
 from repro.core import relay as relay_ops
 from repro.strategies import registry
-from repro.strategies.base import AggregationStrategy, State
+from repro.strategies.base import AggregationStrategy, ExecutionContext, State
 
 __all__ = ["MemoryStrategy"]
+
+_FUSED_MODES = (False, "kernel")
 
 
 class MemoryStrategy(AggregationStrategy):
@@ -43,6 +55,11 @@ class MemoryStrategy(AggregationStrategy):
     needs_A = True
     scalar_collapsible = False  # stale replay cannot collapse to weights
     stateful = True
+
+    def __init__(self, fused: "bool | str" = False):
+        if fused not in _FUSED_MODES:
+            raise ValueError(f"fused must be one of {_FUSED_MODES}, got {fused!r}")
+        self.fused = fused
 
     def init_state(self, n: int, d: int) -> jax.Array:
         # zeros: a client blocked since round 0 contributes nothing until
@@ -60,6 +77,23 @@ class MemoryStrategy(AggregationStrategy):
         contrib = t * tilde + (1.0 - t) * state
         delta = jnp.ones((n,), jnp.float32) @ contrib / n
         return delta, contrib
+
+    def aggregate_tree(self, deltas, tau_up, tau_dd, A, state,
+                       ctx: ExecutionContext):
+        if self.fused == "kernel" and not ctx.spmd_axes:
+            # flatten-once + fused select-accumulate-update: the tilde
+            # consensus intermediate lives in VMEM only; the kernel
+            # writes exactly the (d,) delta and the new (n, d) buffer.
+            spec = flatten.flat_spec(deltas, stacked=True)
+            stack = flatten.ravel_stacked(deltas, dtype=jnp.float32)
+            from repro.kernels import ops as kernel_ops
+
+            gflat, contrib = kernel_ops.fused_memory_update(
+                A, tau_up, tau_dd, stack, state, block_d=ctx.fused_block_d
+            )
+            return flatten.unravel(spec, gflat, dtype=jnp.float32), contrib
+        # oracle (and pjit-shardable) path: flatten once, staged jnp ops.
+        return super().aggregate_tree(deltas, tau_up, tau_dd, A, state, ctx)
 
 
 registry.register("memory", MemoryStrategy)

@@ -1,0 +1,153 @@
+"""Quantized relaying: any inner strategy behind a wire-format codec.
+
+The paper's scheme doubles each client's uplink traffic (its own update
+plus relayed neighbors'); ``quantized`` models the natural response —
+compress the dense ``(n, d)`` update stack to a wire format *before*
+the relay mix.  It wraps an arbitrary inner
+:class:`~repro.strategies.base.AggregationStrategy` (``colrel`` by
+default) and a :class:`~repro.wire.WireCodec` from the codec registry:
+
+    strategies.get("quantized")                                # int8(colrel)
+    strategies.get("quantized", codec="int8",
+                   codec_options={"bits": 4})
+    strategies.get("quantized", codec="topk", inner="multihop",
+                   inner_options={"hops": 2})
+
+**Unbiasedness-correction hook.**  The codec's
+:class:`~repro.wire.CodecDescriptor` declares any known multiplicative
+bias (``E[decode(encode(x))] = gain · x`` — e.g. ``randk``'s
+``gain = k/d``); the strategy divides the decoded stack by it before
+the inner aggregation, so an unbiased inner scheme stays unbiased
+through the wire.  This is the same correction funnel the multihop
+strategy's Monte-Carlo calibration uses for K-hop weight compounding —
+wire bias and relay bias enter at one point each.
+
+**State threading.**  Stochastic codecs carry a PRNG key; the strategy
+threads ``(codec_state, inner_state)`` through the compiled round's
+``agg_state``, so fresh quantization draws every round cost zero
+retraces (asserted in ``tests/test_wire.py``).
+
+**Execution.**  ``fused=False`` (default) is the dequant oracle: ravel
+once, ``decode`` to an f32 stack, inner ``aggregate``.
+``fused="kernel"`` streams the int8 affine wire form through the fused
+Pallas dequantize-mix-accumulate kernel
+(``kernels/fused_dequant.py``) — the f32 stack is never materialized —
+keyed off ``aggregate_tree``'s ExecutionContext exactly like colrel's
+``fused="kernel"``: under pjit (``ctx.spmd_axes``) it falls back to the
+dense path so GSPMD can partition the contraction (DESIGN.md §2/§8).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import wire
+from repro.core import flatten
+from repro.strategies import registry
+from repro.strategies.base import AggregationStrategy, ExecutionContext, State
+
+__all__ = ["QuantizedStrategy"]
+
+_FUSED_MODES = (False, "kernel")
+
+
+class QuantizedStrategy(AggregationStrategy):
+    """Codec-compressed wire format around an inner aggregation scheme."""
+
+    name = "quantized"
+    scalar_collapsible = False  # quantization happens on the dense stack
+    stateful = True             # (codec_state, inner_state)
+
+    def __init__(self, codec="int8", inner="colrel", fused: "bool | str" = False,
+                 codec_options=None, inner_options=None):
+        self.codec = wire.resolve(codec, **dict(codec_options or {}))
+        self.inner = registry.resolve(inner, **dict(inner_options or {}))
+        if isinstance(self.inner, QuantizedStrategy):
+            raise ValueError("quantized strategies do not nest")
+        if fused not in _FUSED_MODES:
+            raise ValueError(f"fused must be one of {_FUSED_MODES}, got {fused!r}")
+        if fused == "kernel":
+            if not self.codec.supports_fused_dequant:
+                raise ValueError(
+                    f"codec {self.codec.name!r} has no int8 affine form; "
+                    "the fused dequant kernel needs supports_fused_dequant"
+                )
+            if self.inner.name != "colrel":
+                raise ValueError(
+                    "the fused dequant kernel computes the colrel collapse; "
+                    f"inner strategy {self.inner.name!r} cannot use it"
+                )
+        self.fused = fused
+        # proxy the inner scheme's connectivity contract (instance
+        # attributes shadow the class defaults)
+        self.needs_A = self.inner.needs_A
+
+    @property
+    def calibration_tracks_A(self) -> bool:
+        return self.inner.calibration_tracks_A
+
+    def calibrate(self, model, A) -> "QuantizedStrategy":
+        inner = self.inner.calibrate(model, A)
+        if inner is self.inner:
+            return self
+        return QuantizedStrategy(codec=self.codec, inner=inner,
+                                 fused=self.fused)
+
+    # -- state -----------------------------------------------------------
+    def init_state(self, n: int, d: int) -> State:
+        return (self.codec.init_state(n, d), self.inner.init_state(n, d))
+
+    # -- the wire --------------------------------------------------------
+    def _debias(self, decoded, d: int):
+        """The unbiasedness-correction hook: divide out the codec's
+        declared multiplicative gain (a static Python float, so this
+        folds into the compiled round for free)."""
+        gain = self.codec.descriptor(d).gain
+        if gain != 1.0:
+            decoded = decoded / jnp.float32(gain)
+        return decoded
+
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State):
+        codec_state, inner_state = state
+        encoded, codec_state = self.codec.encode(
+            updates.astype(jnp.float32), codec_state
+        )
+        decoded = self._debias(self.codec.decode(encoded), updates.shape[-1])
+        delta, inner_state = self.inner.aggregate(
+            decoded, tau_up, tau_dd, A, inner_state
+        )
+        return delta, (codec_state, inner_state)
+
+    def aggregate_tree(self, deltas, tau_up, tau_dd, A, state,
+                       ctx: ExecutionContext):
+        if self.fused == "kernel" and not ctx.spmd_axes:
+            # flatten-once + fused dequant: encode the raveled stack,
+            # then stream the int8 payload through one Pallas pass with
+            # the dequant scales (and the bias correction) folded into
+            # the collapsed colrel weight row.
+            spec = flatten.flat_spec(deltas, stacked=True)
+            stack = flatten.ravel_stacked(deltas, dtype=jnp.float32)
+            codec_state, inner_state = state
+            (q, scale), codec_state = self.codec.encode(stack, codec_state)
+            gain = self.codec.descriptor(spec.d).gain
+            from repro.kernels import ops as kernel_ops
+
+            gflat = kernel_ops.fused_dequant_aggregate(
+                A, tau_up, tau_dd, q, scale / jnp.float32(gain),
+                block_d=ctx.fused_block_d,
+            )
+            return (flatten.unravel(spec, gflat, dtype=jnp.float32),
+                    (codec_state, inner_state))
+        # dequant oracle (and the pjit-shardable path): flatten once,
+        # decode to f32, inner dense aggregation.
+        spec = flatten.flat_spec(deltas, stacked=True)
+        stack = flatten.ravel_stacked(deltas, dtype=ctx.flat_dtype)
+        gflat, state = self.aggregate(stack, tau_up, tau_dd, A, state)
+        return flatten.unravel(spec, gflat, dtype=jnp.float32), state
+
+    def __repr__(self) -> str:
+        return (f"QuantizedStrategy(codec={self.codec.name!r}, "
+                f"inner={self.inner.name!r}, fused={self.fused!r})")
+
+
+registry.register("quantized", QuantizedStrategy)

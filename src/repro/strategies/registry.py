@@ -8,6 +8,24 @@ funnel every legacy spelling goes through — ``Aggregation`` enum values,
 plain strings, already-built instances, and the two deprecated fused
 knobs (``Aggregation.COLREL_FUSED`` and ``RoundConfig.use_fused_kernel``)
 which warn and forward onto the ``colrel`` strategy's ``fused`` option.
+
+Typical use::
+
+    from repro import strategies
+
+    strategies.available()               # ('colrel', 'fedavg_blind', ...)
+    s = strategies.get("colrel", fused="kernel")
+    s = strategies.get("quantized", codec="int8",
+                       codec_options={"bits": 4})
+
+    @strategies.register("my_scheme")    # class decorator form
+    class MyScheme(strategies.AggregationStrategy): ...
+
+``available(include_deprecated=True)`` also lists warning aliases;
+``canonical_name`` maps any spelling to its registry key without
+instantiating (cheap validation).  The protocol a strategy implements
+is documented in ``strategies/base.py`` and the authoring walkthrough
+in ``docs/strategy-authoring.md``.
 """
 
 from __future__ import annotations

@@ -1,0 +1,51 @@
+"""Wire-format codecs for quantized relaying (DESIGN.md §8).
+
+Relaying doubles each client's uplink payload, so the wire format of
+the ``(n, d)`` update stack is the next scaling axis after connectivity
+itself.  One protocol — :class:`WireCodec` (``encode``/``decode`` +
+:class:`CodecDescriptor`) — and a string-keyed registry mirroring
+``repro.strategies``::
+
+    from repro import wire
+
+    wire.available()                 # what the CLI / benches see
+    codec = wire.get("int8", bits=4)
+    enc, state = codec.encode(stack, codec.init_state(n, d))
+    recon = codec.decode(enc)
+
+    @wire.register("fp8")
+    class FP8Codec(wire.WireCodec): ...
+
+Built-in codecs:
+
+* ``identity`` — the no-op format (infinite bits; the equivalence
+  anchor: ``quantized(colrel, codec="identity")`` is bitwise colrel).
+* ``int8`` — symmetric ``bits``-level quantization with stochastic
+  rounding: unbiased by construction, per-client scales, and the
+  affine ``(int8, scale)`` form the fused Pallas dequant-accumulate
+  kernel streams directly.
+* ``topk`` — deterministic top-k sparsification (biased, declared so).
+* ``randk`` — uniform random-k sparsification; known gain ``k/d`` the
+  strategy's unbiasedness-correction hook divides out.
+
+The consuming strategy is ``strategies.get("quantized", codec=...)``;
+importing this package registers the built-in codecs.
+"""
+
+from repro.wire.base import CodecDescriptor, WireCodec
+from repro.wire.registry import available, get, register, resolve
+from repro.wire.int8 import IdentityCodec, Int8StochasticCodec
+from repro.wire.topk import RandKCodec, TopKCodec
+
+__all__ = [
+    "CodecDescriptor",
+    "WireCodec",
+    "available",
+    "get",
+    "register",
+    "resolve",
+    "IdentityCodec",
+    "Int8StochasticCodec",
+    "TopKCodec",
+    "RandKCodec",
+]

@@ -1,0 +1,116 @@
+"""The wire-format codec protocol (DESIGN.md §8).
+
+Collaborative relaying doubles each client's uplink traffic — its own
+update plus its neighbors' relayed consensus — so the wire format of the
+``(n, d)`` update stack is the binding cost of peer-aided FL over
+intermittent mmWave links (the relay-traffic framing of Yemini et al.,
+arXiv:2205.10998, and FedDec, arXiv:2306.06715).  A :class:`WireCodec`
+is the compression half of that story: a pure-JAX ``encode``/``decode``
+pair over the dense update stack, plus a :class:`CodecDescriptor` that
+tells the *strategy layer* how the codec perturbs the aggregation —
+whether the reconstruction is unbiased, the known multiplicative gain to
+divide out (the unbiasedness-correction hook), and a per-coordinate
+noise proxy for the variance-vs-bits bookkeeping.
+
+Design constraints, in order:
+
+* **jit round-trips without recompiles.**  Encode/decode are pure
+  functions of traced inputs; all shapes (quantization levels, top-k
+  support size) are static Python values fixed at construction/trace
+  time.  Stochastic codecs carry a PRNG key as *codec state*, threaded
+  through the compiled round inside ``agg_state`` — a shape-stable
+  ``(2,)`` uint32, so fresh randomness every round costs zero retraces.
+* **the encoded form is a dense device representation.**  ``topk``
+  conceptually ships ``k`` (index, value) pairs; on device it stays a
+  masked dense array so shapes are static.  ``bits_per_coord`` in the
+  descriptor accounts for the *wire* cost, not the device layout.
+* **bias is the strategy's problem, not the codec's.**  ``decode``
+  returns the raw reconstruction; a codec with a known multiplicative
+  bias (e.g. rand-k keeps each coordinate with probability k/d, so
+  ``E[decode] = (k/d)·x``) declares it as ``descriptor().gain`` and the
+  consuming strategy divides it out.  This mirrors how the multihop
+  strategy's Monte-Carlo correction restores condition (5) — one
+  correction funnel, two sources of bias.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+
+__all__ = ["CodecDescriptor", "WireCodec"]
+
+State = Any
+Encoded = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecDescriptor:
+    """How a codec perturbs the aggregation — the strategy-facing contract.
+
+    Attributes:
+        name: registry key of the codec that produced this descriptor.
+        bits_per_coord: average wire cost per coordinate of the encoded
+            update (per-row side information such as scales amortized in).
+        unbiased: True when ``E[decode(encode(x))] == x`` exactly (over
+            the codec's own randomness), *after* dividing by ``gain``.
+        gain: known multiplicative bias — ``E[decode(encode(x))] ==
+            gain * x``.  The consuming strategy's unbiasedness-correction
+            hook divides the decoded stack by this (1.0 = no correction).
+        rel_variance: per-coordinate reconstruction-noise proxy in units
+            of the per-client row scale squared (int8: ``1/(4·L²)`` for
+            ``L`` quantization levels; rand-k after correction:
+            ``d/k - 1`` in units of the coordinate's own energy).  0.0
+            means "not modeled" (deterministic, data-dependent error —
+            e.g. top-k).
+    """
+
+    name: str
+    bits_per_coord: float
+    unbiased: bool
+    gain: float = 1.0
+    rel_variance: float = 0.0
+
+
+class WireCodec:
+    """Base class / protocol for update-stack wire formats.
+
+    Subclasses implement ``encode`` / ``decode`` (and ``descriptor``);
+    everything operates on the dense flattened ``(n, d)`` update stack —
+    pytree plumbing stays in the strategy layer (``core/flatten.py``).
+    """
+
+    #: registry key; set by subclasses
+    name: str = "base"
+    #: whether the codec carries state across rounds (e.g. a PRNG key)
+    stateful: bool = False
+    #: True when ``encode`` returns ``(q int8 (n, d), scale f32 (n, 1))``
+    #: — the affine form the fused Pallas dequant-accumulate kernel
+    #: (``kernels/fused_dequant.py``) consumes without ever
+    #: materializing the dequantized f32 stack.
+    supports_fused_dequant: bool = False
+
+    def descriptor(self, d: int) -> CodecDescriptor:
+        """The bias/variance contract for flat dimension ``d``."""
+        raise NotImplementedError
+
+    def init_state(self, n: int, d: int) -> State:
+        """Initial codec state for ``n`` clients and flat dim ``d``
+        (``()`` for deterministic codecs)."""
+        del n, d
+        return ()
+
+    def encode(self, x: jax.Array, state: State) -> Tuple[Encoded, State]:
+        """Dense ``(n, d)`` f32 stack -> (encoded, next state)."""
+        raise NotImplementedError
+
+    def decode(self, encoded: Encoded) -> jax.Array:
+        """Encoded form -> reconstructed ``(n, d)`` f32 stack (raw — the
+        strategy divides by ``descriptor().gain``)."""
+        raise NotImplementedError
+
+    # --------------------------------------------------------------------
+    def __repr__(self) -> str:  # registry listings / error messages
+        return f"{type(self).__name__}(name={self.name!r})"

@@ -1,0 +1,117 @@
+"""Integer quantization with stochastic rounding (the ``int8`` codec).
+
+Per-client affine quantization of the flattened update row: client
+``i``'s row is scaled by ``s_i = max_j |x_ij| / L`` (``L = 2^(b-1) - 1``
+levels for ``b`` bits) and rounded *stochastically* —
+
+    q = floor(x / s + u),   u ~ U[0, 1)  i.i.d. per coordinate
+
+so ``E[q · s] = x`` exactly: the wire format is unbiased by
+construction and the PS-side aggregation needs no correction
+(``descriptor().gain == 1``).  The price is quantization noise of
+variance ``s² · f(1-f) <= s²/4`` per coordinate (``f`` the fractional
+part), which adds on top of the connectivity-induced variance floor of
+Theorem 1 — ``benchmarks/quant_bench.py`` traces exactly that curve as
+``b`` sweeps down from 8.
+
+The encoded form is ``(q int8 (n, d), s f32 (n, 1))`` — the affine
+shape the fused Pallas dequant-accumulate kernel
+(``kernels/fused_dequant.py``) consumes by folding ``s`` into the
+aggregation weights, streaming the int8 stack through HBM once at a
+quarter of the f32 traffic.  On TPU the same stochastic rounding is a
+native ``pltpu.stochastic_round``; here encode is pure jnp so clients
+(which quantize *before* the wire) stay backend-agnostic.
+
+Randomness is codec state: a ``(2,)`` uint32 PRNG key threaded through
+the compiled round inside ``agg_state``, split once per encode — fresh
+draws every round, zero recompiles.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.wire import registry
+from repro.wire.base import CodecDescriptor, State, WireCodec
+
+__all__ = ["IdentityCodec", "Int8StochasticCodec"]
+
+
+class IdentityCodec(WireCodec):
+    """The no-op wire format (infinite bits): decode(encode(x)) is x.
+
+    Exists so ``quantized(inner, codec="identity")`` is *bitwise* the
+    inner strategy — the degenerate end of the variance-vs-bits curve
+    and the equivalence anchor in ``tests/test_wire.py``.
+    """
+
+    name = "identity"
+
+    def descriptor(self, d: int) -> CodecDescriptor:
+        return CodecDescriptor(name=self.name, bits_per_coord=32.0,
+                               unbiased=True)
+
+    def encode(self, x: jax.Array, state: State) -> Tuple[jax.Array, State]:
+        return x.astype(jnp.float32), state
+
+    def decode(self, encoded: jax.Array) -> jax.Array:
+        return encoded
+
+
+class Int8StochasticCodec(WireCodec):
+    """``b``-bit symmetric quantization with stochastic rounding.
+
+    ``bits`` <= 8; the device container is int8 regardless (fewer bits
+    just use fewer levels — the wire cost is ``bits`` per coordinate).
+    """
+
+    name = "int8"
+    stateful = True
+    supports_fused_dequant = True
+
+    def __init__(self, bits: int = 8, seed: int = 0):
+        if not 2 <= int(bits) <= 8:
+            raise ValueError(f"bits must be in [2, 8], got {bits}")
+        self.bits = int(bits)
+        self.seed = int(seed)
+        #: symmetric levels: q in [-L, L]
+        self.levels = 2 ** (self.bits - 1) - 1
+
+    def descriptor(self, d: int) -> CodecDescriptor:
+        return CodecDescriptor(
+            name=self.name,
+            # + the one f32 scale amortized over the row
+            bits_per_coord=self.bits + 32.0 / max(d, 1),
+            unbiased=True,
+            gain=1.0,
+            # worst-case SR noise per coordinate, in units of the row
+            # scale squared: Var = f(1-f) <= 1/4 at the quantization
+            # grid pitch s = rowmax / L
+            rel_variance=1.0 / (4.0 * self.levels**2),
+        )
+
+    def init_state(self, n: int, d: int) -> jax.Array:
+        del n, d
+        return jax.random.PRNGKey(self.seed)
+
+    def encode(self, x: jax.Array, state: State) -> Tuple[tuple, State]:
+        key, sub = jax.random.split(state)
+        xf = x.astype(jnp.float32)
+        # per-client row scale; floor avoids 0/0 on an all-zero update
+        scale = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / self.levels
+        scale = jnp.maximum(scale, jnp.float32(1e-12))
+        u = jax.random.uniform(sub, xf.shape, jnp.float32)
+        q = jnp.floor(xf / scale + u)
+        q = jnp.clip(q, -self.levels, self.levels).astype(jnp.int8)
+        return (q, scale), key
+
+    def decode(self, encoded: tuple) -> jax.Array:
+        q, scale = encoded
+        return q.astype(jnp.float32) * scale
+
+
+registry.register("identity", IdentityCodec)
+registry.register("int8", Int8StochasticCodec)

@@ -1,0 +1,404 @@
+"""Wire-format codecs and the quantized relaying strategy.
+
+Five layers:
+  1. codec round-trips — int8 stochastic rounding is unbiased (mean
+     over draws converges to the input) and bounded by one grid pitch;
+     top-k keeps exactly the k largest-|x| coordinates per row; rand-k
+     is unbiased after the descriptor's gain correction;
+  2. registry mechanics — get/register/resolve, unknown codecs fail
+     loudly, custom codecs slot into the quantized strategy;
+  3. the quantized strategy — identity codec is *bitwise* the inner
+     strategy (the infinite-bits anchor), codec state threads through
+     jax.jit without recompiles, calibration proxies to the inner
+     scheme, golden-fixture entry pins the int8(colrel) trajectory;
+  4. the fused Pallas kernels — dequant-mix-accumulate vs the dequant
+     oracle, and the memory strategy's select-accumulate-update vs its
+     staged jnp path, both at the kernel (interpret=True) and the round
+     level;
+  5. the example CLI option parser (typed + dotted --strategy-opt).
+"""
+
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import strategies, wire
+from repro.core import topology
+from repro.core.connectivity import sample_round
+from repro.fl import ExperimentSpec, build_experiment
+from repro.fl.round import RoundConfig, make_round_fn
+from repro.kernels import ops as kernel_ops
+from repro.kernels.fused_dequant import fused_dequant_aggregate_pallas
+from repro.kernels.fused_memory import fused_memory_update_pallas
+from repro.optim import sgd, sgd_momentum
+from repro.strategies.base import ExecutionContext
+
+_GG_PATH = pathlib.Path(__file__).parent / "golden" / "generate_golden.py"
+_spec = importlib.util.spec_from_file_location("_golden_gen_wire", _GG_PATH)
+gg = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(gg)
+
+GOLDEN = np.load(pathlib.Path(__file__).parent / "golden" / "round_golden.npz")
+
+RNG = np.random.default_rng(123)
+
+
+def _stack(n=6, d=128, rng=RNG):
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+def _taus(n=6, rng=RNG):
+    tu = jnp.asarray((rng.random(n) < 0.7).astype(np.float32))
+    td = jnp.asarray((rng.random((n, n)) < 0.6).astype(np.float32))
+    A = jnp.asarray(np.abs(rng.normal(size=(n, n))) + np.eye(n), jnp.float32)
+    return tu, td, A
+
+
+# ---------------------------------------------------------------------------
+# 1. codec round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_int8_roundtrip_bounded_by_grid_pitch():
+    x = _stack()
+    codec = wire.get("int8")
+    (q, scale), _ = codec.encode(x, codec.init_state(*x.shape))
+    assert q.dtype == jnp.int8 and scale.shape == (x.shape[0], 1)
+    recon = codec.decode((q, scale))
+    # stochastic rounding moves each coordinate at most one grid step
+    err = np.abs(np.asarray(recon - x))
+    np.testing.assert_array_less(
+        err, np.broadcast_to(np.asarray(scale), err.shape) + 1e-9)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_int8_stochastic_rounding_unbiased(bits):
+    """Mean reconstruction over independent draws converges to x at the
+    Monte-Carlo rate — the unbiasedness the wire format is built on."""
+    x = _stack(n=4, d=64)
+    codec = wire.get("int8", bits=bits)
+    state = codec.init_state(4, 64)
+    draws = 1500
+    acc = jnp.zeros_like(x)
+    for _ in range(draws):
+        enc, state = codec.encode(x, state)
+        acc = acc + codec.decode(enc)
+    scale = np.asarray(jnp.max(jnp.abs(x), axis=1, keepdims=True)) / codec.levels
+    err = np.abs(np.asarray(acc / draws - x))
+    # per-coordinate SR noise is at most one grid pitch; 5 sigma of the
+    # mean of `draws` bounded draws
+    np.testing.assert_array_less(
+        err, np.broadcast_to(5.0 * scale / np.sqrt(draws), err.shape) + 1e-7)
+
+
+def test_int8_encode_deterministic_given_state():
+    x = _stack()
+    codec = wire.get("int8")
+    st = codec.init_state(*x.shape)
+    (q1, s1), next1 = codec.encode(x, st)
+    (q2, s2), _ = codec.encode(x, st)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    # and the state advances, so the next round draws fresh randomness
+    (q3, _), _ = codec.encode(x, next1)
+    assert not np.array_equal(np.asarray(q1), np.asarray(q3))
+
+
+def test_topk_support_masks():
+    rng = np.random.default_rng(5)
+    x = _stack(n=5, d=40, rng=rng)
+    codec = wire.get("topk", k=7)
+    enc, _ = codec.encode(x, ())
+    recon = np.asarray(codec.decode(enc))
+    xs = np.asarray(x)
+    for i in range(5):
+        support = np.flatnonzero(recon[i])
+        assert support.size == 7
+        # the kept coordinates are exactly the 7 largest-|x| ones
+        top = np.argsort(-np.abs(xs[i]))[:7]
+        assert set(support) == set(top)
+        np.testing.assert_array_equal(recon[i][support], xs[i][support])
+    # descriptor is honest about the bias
+    assert not codec.descriptor(40).unbiased
+
+
+def test_randk_unbiased_after_gain_correction():
+    x = _stack(n=3, d=32)
+    codec = wire.get("randk", fraction=0.25)
+    desc = codec.descriptor(32)
+    assert desc.gain == pytest.approx(8 / 32)
+    state = codec.init_state(3, 32)
+    draws = 4000
+    acc = jnp.zeros_like(x)
+    for _ in range(draws):
+        enc, state = codec.encode(x, state)
+        acc = acc + codec.decode(enc)
+    corrected = np.asarray(acc / draws) / desc.gain
+    # per-coordinate variance after correction is (d/k - 1) x^2
+    sigma = np.abs(np.asarray(x)) * np.sqrt(desc.rel_variance / draws)
+    np.testing.assert_array_less(np.abs(corrected - np.asarray(x)),
+                                 5.0 * sigma + 1e-6)
+    # support size is exactly k per row
+    enc, _ = codec.encode(x, state)
+    assert (np.count_nonzero(np.asarray(enc), axis=1) <= 8).all()
+
+
+# ---------------------------------------------------------------------------
+# 2. registry mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_wire_registry_lists_builtins():
+    names = wire.available()
+    assert {"identity", "int8", "topk", "randk"} <= set(names)
+
+
+def test_wire_registry_unknown_fails_loudly():
+    with pytest.raises(KeyError, match="unknown wire codec"):
+        wire.get("does_not_exist")
+    with pytest.raises(ValueError, match="already registered"):
+        wire.register("int8", wire.Int8StochasticCodec)
+
+
+def test_custom_codec_slots_into_quantized_strategy():
+    @wire.register("negate", overwrite=True)
+    class NegateCodec(wire.WireCodec):
+        name = "negate"
+
+        def descriptor(self, d):
+            return wire.CodecDescriptor(name="negate", bits_per_coord=32.0,
+                                        unbiased=True, gain=-1.0)
+
+        def encode(self, x, state):
+            return -x, state
+
+        def decode(self, encoded):
+            return encoded
+
+    s = strategies.get("quantized", codec="negate", inner="fedavg_perfect")
+    x = _stack()
+    tu, td, A = _taus()
+    # gain -1 is divided out by the correction hook: decode(-x)/-1 == x
+    delta, _ = s.aggregate(x, tu, td, A, s.init_state(*x.shape))
+    np.testing.assert_allclose(np.asarray(delta),
+                               np.asarray(jnp.mean(x, axis=0)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 3. the quantized strategy
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_identity_is_bitwise_inner():
+    """Infinite bits: the identity codec makes quantized(colrel) the
+    exact colrel dense aggregation, bit for bit."""
+    x = _stack(n=8, d=300)
+    tu, td, A = _taus(n=8)
+    qs = strategies.get("quantized", codec="identity")
+    dq, _ = qs.aggregate(x, tu, td, A, qs.init_state(8, 300))
+    dc, _ = strategies.get("colrel").aggregate(x, tu, td, A, ())
+    np.testing.assert_array_equal(np.asarray(dq), np.asarray(dc))
+
+
+def test_quantized_round_golden():
+    """The int8(colrel) round trajectory is pinned in the golden fixture
+    so codec/strategy refactors cannot silently drift it."""
+    params, _ = gg.run_quantized()
+    np.testing.assert_array_equal(np.asarray(params["x"], np.float32),
+                                  GOLDEN[f"{gg.QUANT_TAG}|x"])
+    np.testing.assert_array_equal(np.asarray(params["W"], np.float32),
+                                  GOLDEN[f"{gg.QUANT_TAG}|W"])
+
+
+def test_quantized_state_jit_roundtrip_no_recompile():
+    """(codec key, inner state) threads through the compiled round;
+    taus change every call, randomness is fresh, zero retraces."""
+    traces = []
+    H, centers, Wc, model, A = gg.PROB
+    strat = strategies.get("quantized", codec="int8")
+    rc = RoundConfig(n_clients=gg.N, local_steps=2, aggregation=strat)
+    server_opt = sgd_momentum(1.0, beta=0.9)
+    base = make_round_fn(gg.make_loss(H, Wc), sgd(0.05), server_opt, rc)
+
+    def counted(*a):
+        traces.append(1)
+        return base(*a)
+
+    fn = jax.jit(counted)
+    params = {"x": jnp.zeros(gg.DX, jnp.float32),
+              "W": jnp.zeros((3, 4), jnp.float32)}
+    sstate = server_opt.init(params)
+    st = strat.init_state(gg.N, gg.DX + 12)
+    tau_rng = np.random.default_rng(3)
+    bat_rng = np.random.default_rng(6)
+    keys = [np.asarray(st[0])]
+    for _ in range(3):
+        tu, td = sample_round(model, tau_rng)
+        b = gg.batches_for(bat_rng, 2)
+        params, sstate, st, metrics = fn(
+            params, sstate, st, jax.tree.map(jnp.asarray, b),
+            jnp.asarray(tu, jnp.float32), jnp.asarray(td, jnp.float32),
+            jnp.asarray(A, jnp.float32))
+        keys.append(np.asarray(st[0]))
+    assert len(traces) == 1, f"retraced {len(traces)} times"
+    # the codec PRNG key advanced every round
+    assert not np.array_equal(keys[0], keys[-1])
+    # quantized has no scalar collapse -> weight_sum logs NaN by contract
+    assert np.isnan(float(metrics["weight_sum"]))
+
+
+def test_quantized_proxies_inner_contract():
+    q_colrel = strategies.get("quantized", inner="colrel")
+    assert q_colrel.needs_A and q_colrel.stateful
+    q_blind = strategies.get("quantized", inner="fedavg_blind")
+    assert not q_blind.needs_A
+    # calibration proxies: quantized(multihop K=2) calibrates the inner
+    m = topology.paper_fig2a()
+    q_hop = strategies.get("quantized", inner="multihop",
+                           inner_options={"hops": 2})
+    calibrated = q_hop.calibrate(m, np.eye(10))
+    assert calibrated.inner.correction is not None
+    assert calibrated.calibration_tracks_A
+    assert calibrated.codec is q_hop.codec
+
+
+def test_quantized_rejects_bad_combinations():
+    with pytest.raises(ValueError, match="do not nest"):
+        strategies.get("quantized", inner="quantized")
+    with pytest.raises(ValueError, match="supports_fused_dequant"):
+        strategies.get("quantized", codec="topk", fused="kernel")
+    with pytest.raises(ValueError, match="colrel"):
+        strategies.get("quantized", inner="fedavg_blind", fused="kernel")
+    with pytest.raises(ValueError, match="bits"):
+        wire.get("int8", bits=9)
+
+
+def test_quantized_experiment_spec_end_to_end():
+    spec = ExperimentSpec(model="quadratic", topology="fig2a",
+                          strategy="quantized",
+                          strategy_options={"codec": "int8",
+                                            "codec_options": {"bits": 6}},
+                          channel="markov", rounds=5, seed=0)
+    exp = build_experiment(spec)
+    assert exp.strategy.name == "quantized"
+    log = exp.run()
+    assert len(log.loss) == 5 and np.isfinite(log.loss).all()
+
+
+# ---------------------------------------------------------------------------
+# 4. the fused Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d", [(4, 96), (10, 1000), (16, 2048)])
+def test_fused_dequant_kernel_matches_oracle(n, d):
+    """interpret-mode Pallas vs dequantize-then-two-stage-colrel."""
+    rng = np.random.default_rng(n * d)
+    x = _stack(n=n, d=d, rng=rng)
+    tu, td, A = _taus(n=n, rng=rng)
+    codec = wire.get("int8")
+    (q, scale), _ = codec.encode(x, codec.init_state(n, d))
+    got = fused_dequant_aggregate_pallas(A, tu, td, q, scale,
+                                         block_d=512, interpret=True)
+    recon = codec.decode((q, scale))
+    want, _ = strategies.get("colrel").aggregate(recon, tu, td, A, ())
+    assert got.shape == (d,) and got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    # and the deployable CPU op agrees with the kernel's tiling
+    ops_out = kernel_ops.fused_dequant_aggregate(A, tu, td, q, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ops_out),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,d", [(4, 96), (10, 1000)])
+def test_fused_memory_kernel_matches_oracle(n, d):
+    """interpret-mode Pallas select-accumulate-update vs the memory
+    strategy's staged jnp aggregate."""
+    rng = np.random.default_rng(n + d)
+    x = _stack(n=n, d=d, rng=rng)
+    tu, td, A = _taus(n=n, rng=rng)
+    mem = strategies.get("memory")
+    buf = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    want_delta, want_buf = mem.aggregate(x, tu, td, A, buf)
+    got_delta, got_buf = fused_memory_update_pallas(
+        A, tu, td, x, buf, block_d=512, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_delta), np.asarray(want_delta),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_buf), np.asarray(want_buf),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_memory_fused_round_matches_plain():
+    """Round level: memory fused='kernel' follows the identical
+    trajectory (delta and carried buffer) as the staged path."""
+    x_tree = {"w": _stack(n=gg.N, d=gg.DX + 12).reshape(gg.N, 4, 5)}
+    tu, td, A = _taus(n=gg.N)
+    ctx = ExecutionContext(n_clients=gg.N)
+    plain = strategies.get("memory")
+    fused = strategies.get("memory", fused="kernel")
+    buf = plain.init_state(gg.N, 20)
+    g_p, buf_p = plain.aggregate_tree(x_tree, tu, td, A, buf, ctx)
+    g_f, buf_f = fused.aggregate_tree(x_tree, tu, td, A, buf, ctx)
+    np.testing.assert_allclose(np.asarray(g_p["w"]), np.asarray(g_f["w"]),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(buf_p), np.asarray(buf_f),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_quantized_fused_tree_matches_dequant_oracle():
+    """aggregate_tree with fused='kernel' (flatten-once + fused dequant)
+    vs the dequant-oracle path, same codec draw."""
+    n, d = 8, 520
+    x_tree = {"a": _stack(n=n, d=512).reshape(n, 16, 32),
+              "b": _stack(n=n, d=8)}
+    tu, td, A = _taus(n=n)
+    ctx = ExecutionContext(n_clients=n, fused_block_d=128)
+    s_fused = strategies.get("quantized", codec="int8", fused="kernel")
+    s_oracle = strategies.get("quantized", codec="int8")
+    st = s_fused.init_state(n, d)
+    g_f, st_f = s_fused.aggregate_tree(x_tree, tu, td, A, st, ctx)
+    g_o, st_o = s_oracle.aggregate_tree(x_tree, tu, td, A, st, ctx)
+    for a, b in zip(jax.tree.leaves(g_f), jax.tree.leaves(g_o)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+    # both advanced the codec key identically
+    np.testing.assert_array_equal(np.asarray(st_f[0]), np.asarray(st_o[0]))
+
+
+# ---------------------------------------------------------------------------
+# 5. the example CLI option parser
+# ---------------------------------------------------------------------------
+
+
+def test_cli_strategy_opt_parsing():
+    spec = importlib.util.spec_from_file_location(
+        "_train_cli", pathlib.Path(__file__).parent.parent / "examples"
+        / "train_colrel_cifar.py")
+    cli = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cli)
+
+    assert cli.parse_opt("hops=3") == ("hops", 3)
+    assert cli.parse_opt("lr=2.5e-3") == ("lr", 2.5e-3)
+    assert cli.parse_opt("fused=kernel") == ("fused", "kernel")
+    assert cli.parse_opt("adaptive=true") == ("adaptive", True)
+    assert cli.parse_opt("correction=none") == ("correction", None)
+    # dotted keys build the nested option dicts the quantized strategy
+    # takes: --strategy-opt codec_options.bits=4
+    assert cli.parse_opt("codec_options.bits=4") == ("codec_options.bits", 4)
+    opts = cli.build_options([("codec", "int8"),
+                              ("codec_options.bits", 4),
+                              ("codec_options.seed", 7)])
+    assert opts == {"codec": "int8",
+                    "codec_options": {"bits": 4, "seed": 7}}
+    with pytest.raises(Exception):
+        cli.parse_opt("no_equals_sign")
+    # key conflicts fail loudly in both orders instead of silently
+    # dropping options
+    with pytest.raises(SystemExit, match="scalar option"):
+        cli.build_options([("codec_options", "x"), ("codec_options.bits", 4)])
+    with pytest.raises(SystemExit, match="nested options"):
+        cli.build_options([("codec_options.bits", 4), ("codec_options", "x")])
