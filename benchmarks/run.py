@@ -25,6 +25,7 @@ def all_benches():
         paper_figures,
         quant_bench,
         roofline_report,
+        scan_bench,
         strategy_bench,
         theory,
     )
@@ -43,6 +44,7 @@ def all_benches():
         "channel_adaptive": channel_bench.bench_channel_adaptive,
         "strategies": strategy_bench.bench_strategy_matrix,
         "quant": quant_bench.bench_quant,
+        "scan": scan_bench.bench_scan_engine,
     }
 
 

@@ -1,0 +1,118 @@
+"""Scan-engine benchmark: chunked multi-round compilation vs the
+per-round host loop.
+
+Trains the strongly-convex quadratic task at (n=16, R=512) twice with
+identical seeds — once through the per-round jitted loop (one host
+round-trip per communication round) and once through the chunked
+``lax.scan`` engine (``FLTrainer.run(chunk=K)``, one device program per
+K rounds) — and measures rounds/sec for each, compile excluded.  The
+loop is host-latency-bound at this scale (dispatch + per-round metric
+syncs dwarf the round's arithmetic), which is exactly the regime the
+paper's multi-thousand-round experiments live in; the scan removes that
+bound.
+
+Correctness is asserted alongside perf: both runs must produce
+*bitwise-identical* loss / participation / weight-sum / uplink-bits
+trajectories (they consume the same channel and batch streams and the
+scan body is the loop's round function).
+
+Emits ``BENCH_scan.json`` with the rounds/sec of both paths and the
+speedup factor.  The gate defaults to the 5x the tentpole targets on CPU
+at this shape; ``SCAN_BENCH_MIN_SPEEDUP`` lets throttled shared CI
+runners lower it (the workflow pins 2) without losing the regression
+signal.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel import MarkovChannel, gilbert_elliott
+from repro.core import optimize_weights, topology
+from repro.data import quadratic_problem
+from repro.data.pipeline import ClientDataset
+from repro.fl import FLTrainer
+from repro.optim import sgd, sgd_momentum
+
+from .common import Row
+
+N, R, CHUNK = 16, 512, 64
+WARM = CHUNK  # rounds consumed before timing (compile + stream warmup)
+
+
+def _make_trainer(seed: int = 0) -> FLTrainer:
+    prob = quadratic_problem(N, 16, mu=1.0, L=8.0, hetero=1.0, seed=0)
+    H = jnp.asarray(prob["H"], jnp.float32)
+
+    def loss_fn(params, batch):
+        x = params["x"]
+        d = x - batch["center"][0]
+        return 0.5 * d @ (H @ d) + 0.3 * batch["noise"][0] @ x, {}
+
+    clients = []
+    for i in range(N):
+        c = prob["centers"][i].astype(np.float32)
+        pool = np.random.default_rng(50 + i).normal(size=(2048, 16)).astype(np.float32)
+        clients.append(ClientDataset({"center": np.tile(c, (2048, 1)), "noise": pool},
+                                     batch_size=1, seed=seed + i))
+    model = topology.fully_connected(N, 0.6, p_c=0.7, rho=0.5)
+    res = optimize_weights(model, sweeps=10, fine_tune_sweeps=10)
+    channel = MarkovChannel(gilbert_elliott(model, memory=0.9), seed=seed,
+                            block=256)
+    return FLTrainer(loss_fn, {"x": jnp.zeros(16)}, model, res.A, clients,
+                     sgd(0.02), sgd_momentum(1.0, beta=0.0), local_steps=2,
+                     strategy="colrel", seed=seed, channel=channel)
+
+
+def bench_scan_engine() -> List[Row]:
+    # per-round loop: warm the compile + streams, then time R rounds
+    t_loop = _make_trainer()
+    t_loop.run(WARM)
+    t0 = time.perf_counter()
+    t_loop.run(R)
+    s_loop = time.perf_counter() - t0
+
+    # chunked scan: same seeds, same streams, K rounds per device program
+    t_scan = _make_trainer()
+    t_scan.run(WARM, chunk=CHUNK)
+    t0 = time.perf_counter()
+    t_scan.run(R, chunk=CHUNK)
+    s_scan = time.perf_counter() - t0
+
+    # bitwise-identical trajectories over every round (warmup + timed)
+    for field in ("loss", "participation", "weight_sums", "uplink_bits"):
+        a, b = getattr(t_loop.log, field), getattr(t_scan.log, field)
+        assert a == b, f"scan-vs-loop {field} trajectories diverge"
+    assert np.array_equal(np.asarray(t_loop.params["x"]),
+                          np.asarray(t_scan.params["x"]))
+
+    rps_loop = R / s_loop
+    rps_scan = R / s_scan
+    speedup = s_loop / s_scan
+    floor = float(os.environ.get("SCAN_BENCH_MIN_SPEEDUP", "5"))
+    assert speedup >= floor, (
+        f"scan speedup {speedup:.1f}x < {floor}x at (n={N}, R={R}, K={CHUNK})")
+
+    with open("BENCH_scan.json", "w") as f:
+        json.dump({
+            "n_clients": N,
+            "rounds": R,
+            "chunk": CHUNK,
+            "rounds_per_sec_loop": round(rps_loop, 1),
+            "rounds_per_sec_scan": round(rps_scan, 1),
+            "speedup": round(speedup, 2),
+            "bitwise_identical": True,
+        }, f, indent=1)
+
+    return [
+        (f"scan/loop_n{N}_R{R}", s_loop * 1e6 / R,
+         f"rounds_per_sec={rps_loop:.1f}"),
+        (f"scan/chunk{CHUNK}_n{N}_R{R}", s_scan * 1e6 / R,
+         f"rounds_per_sec={rps_scan:.1f};speedup={speedup:.1f}x"),
+    ]

@@ -102,6 +102,10 @@ def main():
                          "(no oracle link knowledge)")
     ap.add_argument("--reopt-every", type=int, default=50,
                     help="adaptive alpha re-optimization cadence (rounds)")
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="rounds per compiled scan chunk (DESIGN.md §9); "
+                         "must divide the eval/re-opt cadences or the "
+                         "trainer falls back to the per-round loop")
     ap.add_argument("--full-width", action="store_true",
                     help="paper-width ResNet-20 (slow on CPU)")
     ap.add_argument("--out", default="colrel_cifar")
@@ -130,6 +134,7 @@ def main():
         adaptive=args.adaptive,
         reopt_every=args.reopt_every,
         rounds=args.rounds,
+        chunk=args.chunk,
     )
     exp = build_experiment(spec)
     if exp.copt_result is not None:

@@ -27,12 +27,19 @@ and ``docs/channel-presets.md``; the estimator/schedule design in
 DESIGN.md §5.
 """
 
-from .base import ChannelProcess, StaticChannel
+from .base import (
+    BlockBufferedChannel,
+    ChannelProcess,
+    StaticChannel,
+    stacked_trace,
+    static_scan_sampler,
+)
 from .estimator import LinkEstimator
 from .markov import (
     GEParams,
     MarkovChannel,
     channel_key,
+    ge_scan_sampler,
     gilbert_elliott,
     sample_ge_rounds,
     sample_ge_rounds_host,
@@ -42,14 +49,18 @@ from .schedule import AdaptiveConfig, AdaptiveWeightSchedule
 
 __all__ = [
     "ChannelProcess",
+    "BlockBufferedChannel",
     "StaticChannel",
     "MarkovChannel",
     "MobilityChannel",
     "GEParams",
     "channel_key",
     "gilbert_elliott",
+    "ge_scan_sampler",
     "sample_ge_rounds",
     "sample_ge_rounds_host",
+    "stacked_trace",
+    "static_scan_sampler",
     "LinkEstimator",
     "AdaptiveConfig",
     "AdaptiveWeightSchedule",

@@ -8,17 +8,31 @@ marginals themselves.  Everything the trainer needs from a channel is
 * ``tau_for_round(r)`` — the round-r connectivity realization
   ``(tau_up (n,), tau_dd (n, n))``, same conventions as
   :func:`repro.core.connectivity.sample_round`;
+* ``trace(start, rounds)`` — the same stream served in bulk:
+  ``(tau_up (K, n), tau_dd (K, n, n))`` for rounds ``[start, start+K)``.
+  This is what the chunked scan engine (``FLTrainer.run(chunk=K)``,
+  DESIGN.md §9) consumes — one call per chunk instead of one host
+  round-trip per round, device-resident where the process samples on
+  device.  ``trace`` and ``tau_for_round`` read the *same* underlying
+  stream, so loop- and scan-driven training see bitwise-identical taus;
 * ``model_for_round(r)`` — the *ground-truth* per-round marginals as a
   :class:`LinkModel` (the oracle view, used for evaluation / logging
   only; adaptive training must not peek at it).
 
 Rounds are consumed in nondecreasing order (the FL trainer advances one
 round at a time); stateful processes (Markov chains, mobility) may
-refuse to rewind.
+refuse to rewind past their current buffer.
+
+Processes that can sample connectivity as a pure-JAX recurrence
+additionally expose ``scan_sampler() -> (init_fn, sample_fn)``; the scan
+engine threads the returned state through the compiled multi-round
+program so taus never materialize on host at all (the optional in-scan
+sampler of :func:`repro.fl.round.make_scan_round_fn`).
 
 Concrete processes:
 
-* :class:`StaticChannel` (here)           — the paper's i.i.d. model.
+* :class:`StaticChannel` (here)           — the paper's i.i.d. model,
+  block-buffered through the vectorized multi-round sampler.
 * :class:`~repro.channel.markov.MarkovChannel`     — Gilbert–Elliott
   bursty blockage, scan-sampled on device in blocks.
 * :class:`~repro.channel.mobility.MobilityChannel` — waypoint mobility
@@ -29,11 +43,20 @@ from __future__ import annotations
 
 from typing import Protocol, runtime_checkable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.connectivity import LinkModel, sample_round
+from repro.core.connectivity import LinkModel, sample_rounds
 
-__all__ = ["ChannelProcess", "StaticChannel"]
+__all__ = [
+    "ChannelProcess",
+    "BlockBufferedChannel",
+    "StaticChannel",
+    "pair_lane_table",
+    "stacked_trace",
+    "static_scan_sampler",
+]
 
 
 @runtime_checkable
@@ -45,28 +68,165 @@ class ChannelProcess(Protocol):
 
     def tau_for_round(self, r: int) -> tuple[np.ndarray, np.ndarray]: ...
 
+    def trace(self, start: int, rounds: int): ...
+
     def model_for_round(self, r: int) -> LinkModel: ...
 
 
-class StaticChannel:
-    """The paper's i.i.d. channel wrapped in the ``ChannelProcess`` API."""
+def stacked_trace(channel, start: int, rounds: int):
+    """Generic ``trace`` fallback: stack per-round service.
 
-    def __init__(self, model: LinkModel, seed: int = 0):
-        self.model = model
-        self._rng = np.random.default_rng(seed)
-        self._next = 0
+    For processes with per-round host state (e.g. mobility geometry
+    advancing every round) there is nothing to vectorize; this keeps the
+    trace contract — same stream as ``tau_for_round``, bulk layout —
+    at the per-round cost.
+    """
+    ups, dds = zip(*(channel.tau_for_round(start + i) for i in range(rounds)))
+    return np.stack(ups), np.stack(dds)
+
+
+class BlockBufferedChannel:
+    """Serve a per-round tau stream out of block-generated trace buffers.
+
+    Subclasses implement ``_generate_block(rounds) -> (ups, dds)``
+    (numpy or device arrays, shapes ``(R, n)`` / ``(R, n, n)``); this
+    base serves both the per-round API and bulk ``trace`` slices from
+    the same buffers, so the two consumption patterns — the host loop
+    and the chunked scan engine — observe bitwise-identical streams
+    regardless of chunk size.  Blocks are generated forward-only; the
+    stream cannot rewind past the current buffer.
+    """
+
+    def __init__(self, n: int, block: int = 256):
+        if block <= 0:
+            raise ValueError("block must be positive")
+        self._n = int(n)
+        self.block = int(block)
+        self._buf_start = 0  # first round of the current buffer
+        self._ups = None
+        self._dds = None
+        self._ups_np = None  # lazy host view of the buffer (loop service)
+        self._dds_np = None
 
     @property
     def n(self) -> int:
-        return self.model.n
+        return self._n
+
+    def _generate_block(self, rounds: int):
+        raise NotImplementedError
+
+    def _advance_block(self) -> None:
+        if self._ups is not None:
+            self._buf_start += self._ups.shape[0]
+        self._ups, self._dds = self._generate_block(self.block)
+        self._ups_np = self._dds_np = None
+
+    def _ensure(self, r: int) -> None:
+        if r < self._buf_start:
+            raise ValueError(
+                f"{type(self).__name__} cannot rewind to round {r} "
+                f"(buffer starts at {self._buf_start})"
+            )
+        while self._ups is None or r >= self._buf_start + self._ups.shape[0]:
+            self._advance_block()
 
     def tau_for_round(self, r: int) -> tuple[np.ndarray, np.ndarray]:
-        if r != self._next:
-            raise ValueError(
-                f"StaticChannel serves rounds in order; expected {self._next}, got {r}"
-            )
-        self._next += 1
-        return sample_round(self.model, self._rng)
+        self._ensure(r)
+        if self._ups_np is None:
+            # one host transfer per block, not per round
+            self._ups_np = np.asarray(self._ups, np.float64)
+            self._dds_np = np.asarray(self._dds, np.float64)
+        i = r - self._buf_start
+        return self._ups_np[i], self._dds_np[i]
+
+    def trace(self, start: int, rounds: int):
+        """Bulk service of rounds ``[start, start + rounds)``: ``(K, n)``
+        uplinks and ``(K, n, n)`` D2D, concatenated across block refills.
+        Device-resident when ``_generate_block`` samples on device."""
+        parts_u, parts_d = [], []
+        r = start
+        while r < start + rounds:
+            self._ensure(r)
+            i = r - self._buf_start
+            j = min(start + rounds - self._buf_start, self._ups.shape[0])
+            parts_u.append(self._ups[i:j])
+            parts_d.append(self._dds[i:j])
+            r = self._buf_start + j
+        if len(parts_u) == 1:
+            return parts_u[0], parts_d[0]
+        xp = jnp if isinstance(parts_u[0], jax.Array) else np
+        return xp.concatenate(parts_u), xp.concatenate(parts_d)
+
+
+def pair_lane_table(n: int) -> np.ndarray:
+    """``(n*n,)`` gather lanes for assembling ``tau_dd`` from per-pair
+    draws: entry ``(i, j)`` picks its unordered pair's tau_ij lane (upper
+    triangle), tau_ji lane (lower triangle, offset by ``m``), or the
+    constant-1 diagonal lane ``2m`` — the layout every sampler that emits
+    the stacked ``[tij, tji, ones]`` form gathers through."""
+    iu, ju = np.triu_indices(n, k=1)
+    m = iu.shape[0]
+    lane = np.full((n, n), 2 * m, np.int32)
+    lane[iu, ju] = np.arange(m)
+    lane[ju, iu] = m + np.arange(m)
+    return lane.ravel()
+
+
+def static_scan_sampler(model: LinkModel):
+    """In-scan sampler for the paper's i.i.d. law: ``(init_fn, sample_fn)``.
+
+    ``sample_fn(state, key)`` draws one round's ``(tau_up, tau_dd)``
+    inside the compiled multi-round scan — the same one-uniform-per-pair
+    reciprocity coupling as :func:`repro.core.connectivity.sample_round`,
+    in pure jnp.  The process is i.i.d., so the carried state is ``()``.
+    """
+    n = model.n
+    iu, ju = np.triu_indices(n, k=1)
+    m = iu.shape[0]
+    p = jnp.asarray(model.p, jnp.float32)
+    pij = jnp.asarray(model.P[iu, ju], jnp.float32)
+    pji = jnp.asarray(model.P[ju, iu], jnp.float32)
+    e = jnp.asarray(model.E[iu, ju], jnp.float32)
+    pair_lane = jnp.asarray(pair_lane_table(n))
+
+    def init_fn(key):
+        del key
+        return ()
+
+    def sample_fn(state, key):
+        k1, k2 = jax.random.split(key)
+        tau_up = (jax.random.uniform(k1, (n,)) < p).astype(jnp.float32)
+        uu = jax.random.uniform(k2, (m,))
+        both = uu < e
+        tij = both | ((uu >= e) & (uu < pij))
+        tji = both | ((uu >= pij) & (uu < pij + pji - e))
+        cat = jnp.concatenate([tij, tji, jnp.ones((1,), bool)])
+        tau_dd = jnp.take(cat, pair_lane).reshape(n, n).astype(jnp.float32)
+        return tau_up, tau_dd, state
+
+    return init_fn, sample_fn
+
+
+class StaticChannel(BlockBufferedChannel):
+    """The paper's i.i.d. channel wrapped in the ``ChannelProcess`` API.
+
+    Rounds are pre-generated ``block`` at a time through the vectorized
+    :func:`~repro.core.connectivity.sample_rounds` (batched RNG — no
+    per-round host loop), and served per-round or as bulk traces from
+    the same buffer.
+    """
+
+    def __init__(self, model: LinkModel, seed: int = 0, block: int = 256):
+        super().__init__(model.n, block)
+        self.model = model
+        self._rng = np.random.default_rng(seed)
+
+    def _generate_block(self, rounds: int):
+        return sample_rounds(self.model, self._rng, rounds)
 
     def model_for_round(self, r: int) -> LinkModel:
         return self.model
+
+    def scan_sampler(self):
+        """``(init_fn, sample_fn)`` drawing i.i.d. rounds inside the scan."""
+        return static_scan_sampler(self.model)

@@ -46,12 +46,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Union
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.channel.base import BlockBufferedChannel, pair_lane_table
 from repro.core.connectivity import LinkModel
 
 __all__ = [
@@ -60,6 +61,7 @@ __all__ = [
     "channel_key",
     "sample_ge_rounds",
     "sample_ge_rounds_host",
+    "ge_scan_sampler",
     "MarkovChannel",
 ]
 
@@ -307,12 +309,9 @@ def _device_arrays(params: GEParams) -> dict:
     if cached is not None:
         return cached
     q_up, qij, qji, e_c, iu, ju = _conditionals(params)
-    n, m = params.n, iu.shape[0]
+    n = params.n
     lattice = lambda p: np.rint(np.clip(p, 0.0, 1.0) * _LATTICE).astype(np.int64)
     thresh = lambda p: jnp.asarray(lattice(p), jnp.uint16)
-    pair_lane = np.full((n, n), 2 * m, np.int32)  # diagonal -> constant-1 lane
-    pair_lane[iu, ju] = np.arange(m)
-    pair_lane[ju, iu] = m + np.arange(m)
     # upper bound of the only-ji interval [t_qij, t_qij + t_qji - t_e);
     # summed on host (int64) — it can exceed the 15-bit lattice by the
     # rounding slack, which uint16 still holds exactly
@@ -327,7 +326,7 @@ def _device_arrays(params: GEParams) -> dict:
         t_qji=thresh(qji),
         t_e=thresh(e_c),
         t_mid=jnp.asarray(t_mid, jnp.uint16),
-        pair_lane=jnp.asarray(pair_lane.ravel()),
+        pair_lane=jnp.asarray(pair_lane_table(n)),
         pi_up=jnp.asarray(params.pi_up, jnp.float32),
         pi_dd=jnp.asarray(params.pi_dd, jnp.float32),
     )
@@ -369,47 +368,83 @@ def sample_ge_rounds(
 
 
 # ---------------------------------------------------------------------------
+# In-scan sampler: one round per step, for taus drawn inside the train scan
+# ---------------------------------------------------------------------------
+
+
+def ge_scan_sampler(params: GEParams):
+    """Per-round GE sampler for in-scan use: ``(init_fn, sample_fn)``.
+
+    ``init_fn(key)`` draws the packed ``(n + m,)`` bool gate state from
+    the stationary law; ``sample_fn(state, key) -> (tau_up, tau_dd,
+    state)`` advances every gate chain one round and emits that round's
+    realization — the single-step form of :func:`_ge_core`, same integer
+    thresholds, same pair-lane gather, for the scan engine's optional
+    in-scan channel (:func:`repro.fl.round.make_scan_round_fn`).  Unlike
+    the bulk sampler it splits one key per round (that is what a
+    per-step recurrence costs), but the draws never leave the device.
+    """
+    arrs = _device_arrays(params)
+    n = params.n
+    m = int(arrs["t_qij"].shape[0])
+    t_g = jnp.concatenate([arrs["t_g_up"], arrs["t_g_dd"]])
+    t_b = jnp.concatenate([arrs["t_b_up"], arrs["t_b_dd"]])
+    pair_lane = jnp.asarray(arrs["pair_lane"])
+
+    def init_fn(key):
+        su, sp = _stationary_state(params, key)
+        return jnp.concatenate([su, sp])
+
+    def sample_fn(state, key):
+        u15 = jax.random.bits(key, (2 * n + 2 * m,), jnp.uint16) >> jnp.uint16(1)
+        u_gate = u15[: n + m]
+        u_up = u15[n + m : 2 * n + m]
+        u_dd = u15[2 * n + m :]
+        state = jnp.where(state, u_gate >= t_b, u_gate < t_g)
+        su, sp = state[:n], state[n:]
+        ups = su & (u_up < arrs["t_q_up"])
+        tij = sp & (u_dd < arrs["t_qij"])
+        tji = sp & (
+            (u_dd < arrs["t_e"])
+            | ((u_dd >= arrs["t_qij"]) & (u_dd < arrs["t_mid"]))
+        )
+        cat = jnp.concatenate([tij, tji, jnp.ones((1,), bool)])
+        tau_dd = jnp.take(cat, pair_lane).reshape(n, n).astype(jnp.float32)
+        return ups.astype(jnp.float32), tau_dd, state
+
+    return init_fn, sample_fn
+
+
+# ---------------------------------------------------------------------------
 # ChannelProcess wrapper: block-wise scan generation, per-round service
 # ---------------------------------------------------------------------------
 
 
-class MarkovChannel:
-    """Serve a GE trace round-by-round, scan-generating ``block`` rounds
-    at a time on device and carrying the chain state across blocks."""
+class MarkovChannel(BlockBufferedChannel):
+    """Serve a GE trace, scan-generating ``block`` rounds at a time on
+    device and carrying the chain state across blocks.
+
+    Buffers stay device-resident: ``trace(start, K)`` hands the chunked
+    scan engine jax-array slices with no host materialization; only the
+    per-round ``tau_for_round`` service transfers (once per block)."""
 
     def __init__(self, params: GEParams, seed: int = 0, block: int = 256):
-        if block <= 0:
-            raise ValueError("block must be positive")
+        super().__init__(params.n, block)
         self.params = params
-        self.block = int(block)
         self._key, k_init = jax.random.split(channel_key(seed))
         self._arrs = _device_arrays(params)
         self._state = _stationary_state(params, k_init)
-        self._start = 0  # first round of the current buffer
-        self._ups: Optional[np.ndarray] = None
-        self._dds: Optional[np.ndarray] = None
 
-    @property
-    def n(self) -> int:
-        return self.params.n
-
-    def _fill(self) -> None:
+    def _generate_block(self, rounds: int):
         self._key, k = jax.random.split(self._key)
         ups, dds, self._state = _ge_scan(
-            self._arrs, self._state, k, rounds=self.block, n=self.n
+            self._arrs, self._state, k, rounds=rounds, n=self.n
         )
-        self._ups = np.asarray(ups, np.float64)
-        self._dds = np.asarray(dds, np.float64)
-
-    def tau_for_round(self, r: int) -> tuple[np.ndarray, np.ndarray]:
-        if r < self._start:
-            raise ValueError(f"MarkovChannel cannot rewind to round {r} (at {self._start})")
-        while self._ups is None or r >= self._start + self.block:
-            if self._ups is not None:
-                self._start += self.block
-            self._fill()
-        i = r - self._start
-        return self._ups[i], self._dds[i]
+        return ups, dds
 
     def model_for_round(self, r: int) -> LinkModel:
         return self.params.model
+
+    def scan_sampler(self):
+        """``(init_fn, sample_fn)`` advancing the GE chains in-scan."""
+        return ge_scan_sampler(self.params)

@@ -16,6 +16,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.channel.base import stacked_trace
 from repro.core.connectivity import LinkModel, sample_round
 from repro.core.topology import mmwave_geometric
 
@@ -110,6 +111,11 @@ class MobilityChannel:
         tau = sample_round(self._models[e], self._rng)
         self._advance()
         return tau
+
+    def trace(self, start: int, rounds: int) -> tuple[np.ndarray, np.ndarray]:
+        # geometry advances (and may re-derive) every round, so there is
+        # no block to vectorize — serve the bulk contract per-round
+        return stacked_trace(self, start, rounds)
 
     def model_for_round(self, r: int) -> LinkModel:
         e = r // self.epoch

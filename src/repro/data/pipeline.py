@@ -4,7 +4,16 @@
 with its own RNG (clients sample independently, as in local SGD).
 ``federated_batches`` stacks one minibatch per client into a leading
 client axis — the layout the per-client execution mode consumes
-(client axis ↔ mesh "data" axis).
+(client axis ↔ mesh "data" axis).  ``stack_chunk_batches`` is the bulk
+form the chunked scan engine feeds on: K rounds of T local steps for
+every client gathered in one vectorized fancy-index per client, laid out
+``(K, n, T, B, ...)``.
+
+Bulk draws are *stream-equivalent* to repeated single draws: numpy's
+``Generator.integers`` fills a ``(m, B)`` request with exactly the
+values ``m`` successive ``(B,)`` requests would produce, so a trainer
+consuming the stream in chunks of any size sees bitwise-identical
+batches (asserted in ``tests/test_scan_engine.py``).
 """
 
 from __future__ import annotations
@@ -14,7 +23,7 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-__all__ = ["ClientDataset", "federated_batches"]
+__all__ = ["ClientDataset", "federated_batches", "stack_chunk_batches"]
 
 
 @dataclasses.dataclass
@@ -33,11 +42,41 @@ class ClientDataset:
         idx = self._rng.integers(0, self.n, size=self.batch_size)
         return {k: v[idx] for k, v in self.arrays.items()}
 
+    def next_batches(self, m: int) -> Dict[str, np.ndarray]:
+        """``m`` successive minibatches in one vectorized gather:
+        leaves ``(m, B, ...)``, same RNG stream as ``m`` ``next_batch``
+        calls."""
+        idx = self._rng.integers(0, self.n, size=(m, self.batch_size))
+        return {k: v[idx] for k, v in self.arrays.items()}
+
 
 def federated_batches(clients: Sequence[ClientDataset]) -> Dict[str, np.ndarray]:
     """One synchronized round of minibatches, stacked (n_clients, B, ...)."""
     batches = [c.next_batch() for c in clients]
     return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
+
+
+def stack_chunk_batches(
+    clients: Sequence[ClientDataset], local_steps: int, rounds: int = 1
+) -> Dict[str, np.ndarray]:
+    """``rounds`` synchronized rounds of ``local_steps`` minibatches per
+    client, stacked ``(rounds, n_clients, T, B, ...)``.
+
+    One ``rounds * T``-deep gather per client replaces the old nested
+    per-round / per-step python loops; with ``rounds=1`` this is exactly
+    the per-round trainer layout (squeeze the leading axis).
+    """
+    m = rounds * local_steps
+    per_client = [c.next_batches(m) for c in clients]
+
+    def stack(key: str) -> np.ndarray:
+        return np.stack(
+            [pc[key].reshape(rounds, local_steps, *pc[key].shape[1:])
+             for pc in per_client],
+            axis=1,
+        )
+
+    return {k: stack(k) for k in per_client[0]}
 
 
 def make_federated_clients(

@@ -1,10 +1,11 @@
-from .round import RoundConfig, make_round_fn
+from .round import RoundConfig, make_round_fn, make_scan_round_fn
 from .trainer import FLTrainer, TrainLog
 from .experiment import Experiment, ExperimentSpec, TOPOLOGIES, build_experiment
 
 __all__ = [
     "RoundConfig",
     "make_round_fn",
+    "make_scan_round_fn",
     "FLTrainer",
     "TrainLog",
     "Experiment",

@@ -101,6 +101,11 @@ class ExperimentSpec:
             ``"client_sequential"``, ``"weighted_grad"``; DESIGN.md §3).
         local_steps: the paper's T (None = model-kind default).
         rounds: default round budget for :meth:`Experiment.run`.
+        chunk: rounds per compiled scan chunk (DESIGN.md §9) — ``K > 1``
+            runs K rounds as one device program with host syncs only at
+            chunk boundaries, bitwise-identical to the per-round loop;
+            must divide ``reopt_every`` / ``eval_every`` cadences (the
+            trainer falls back to per-round otherwise).
 
     Channel:
         channel: dynamics preset name (``repro/configs/channels.py``:
@@ -133,6 +138,7 @@ class ExperimentSpec:
     mode: str = "per_client"
     local_steps: Optional[int] = None  # None -> model-kind default
     rounds: int = 200
+    chunk: int = 1  # rounds per compiled scan chunk (1 = per-round loop)
     # -- channel -------------------------------------------------------
     channel: str = "static"  # preset name (repro/configs/channels.py)
     adaptive: bool = False   # online link estimation + periodic re-opt
@@ -167,9 +173,10 @@ class Experiment:
     def params(self):
         return self.trainer.params
 
-    def run(self, rounds: Optional[int] = None, *, eval_every: int = 0,
-            verbose: bool = False) -> TrainLog:
+    def run(self, rounds: Optional[int] = None, *, chunk: Optional[int] = None,
+            eval_every: int = 0, verbose: bool = False) -> TrainLog:
         return self.trainer.run(rounds if rounds is not None else self.spec.rounds,
+                                chunk=chunk if chunk is not None else self.spec.chunk,
                                 eval_every=eval_every, verbose=verbose)
 
 

@@ -27,6 +27,12 @@ Execution modes (DESIGN.md §3):
     weighted sum).
   * ``weighted_grad``     — the T=1 algebraic collapse: ColRel ==
     per-client-weighted data-parallel SGD, no per-client model copies.
+
+Multi-round execution (DESIGN.md §9): :func:`make_scan_round_fn` wraps
+the round body in a ``lax.scan`` over a leading K-round axis, so K
+communication rounds run as one device program with a single host
+round-trip — the chunked engine ``FLTrainer.run(chunk=K)`` and the
+production launch path drive.
 """
 
 from __future__ import annotations
@@ -38,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import strategies as strategy_registry
+from repro.core import flatten
 from repro.core.aggregation import Aggregation
 from repro.dist import constrain_grads, spmd_axis_name
 from repro.optim import Optimizer
@@ -239,13 +246,109 @@ def make_round_fn(
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, upd
         )
+        participation = jnp.sum(tau_up.astype(jnp.float32))
+        # Wire-format-aware uplink accounting: bits put on air by the
+        # clients whose uplink delivered this round, priced at the active
+        # codec's per-coordinate wire cost (32 bits/coord for uncoded f32;
+        # the quantized strategy reports its codec descriptor).  d and the
+        # rate are static, so this folds to one multiply in the compiled
+        # round.
+        d_flat = flatten.flat_spec(params).d
+        bits_per_client = jnp.float32(
+            d_flat * strategy.wire_bits_per_coord(d_flat))
         metrics = {
             "loss": mean_loss,
             "delta_norm": global_norm(gdelta),
-            "participation": jnp.sum(tau_up.astype(jnp.float32)),
+            "participation": participation,
+            "uplink_bits": participation * bits_per_client,
             "weight_sum": (jnp.sum(w_scalar) if w_scalar is not None
                            else jnp.float32(jnp.nan)),
         }
         return new_params, server_state, agg_state, metrics
 
     return round_fn
+
+
+def make_scan_round_fn(
+    loss_fn: Callable,
+    client_opt: Optimizer,
+    server_opt: Optimizer,
+    rc: RoundConfig,
+    grad_shardings: Optional[Params] = None,
+    channel_sampler: Optional[Callable] = None,
+):
+    """The chunked multi-round engine: K rounds compiled into one program.
+
+    Wraps the :func:`make_round_fn` body in a single ``lax.scan`` over a
+    leading K-round axis, so a whole chunk of communication rounds runs
+    on device with one host round-trip.  The scan carry is
+    ``(params, server_state, agg_state)`` (plus ``(channel_state, rng)``
+    with an in-scan sampler); per-round ``loss / participation /
+    uplink_bits / weight_sum / delta_norm`` metrics come back stacked
+    with a leading ``(K,)`` axis for bulk host-side logging.
+
+    Two tau sources:
+
+    * default — pre-generated **device-resident channel traces**:
+      ``scan(params, server_state, agg_state, batches, tau_up, tau_dd,
+      A)`` with ``tau_up (K, n)`` / ``tau_dd (K, n, n)`` scanned as
+      per-round inputs (``ChannelProcess.trace`` produces them).  Since
+      the body is the very ``round_fn`` the per-round loop jits, the
+      K-round trajectory is *bitwise identical* to K sequential calls on
+      the same inputs (asserted in ``tests/test_scan_engine.py``).
+    * ``channel_sampler=(...)`` — an in-scan sampler ``sample_fn(state,
+      key) -> (tau_up, tau_dd, state)`` (see
+      ``ChannelProcess.scan_sampler``): connectivity is drawn *inside*
+      the compiled program, no tau tensors ever materialize on host.
+      Signature becomes ``scan(params, server_state, agg_state, batches,
+      channel_state, rng, A) -> (params, server_state, agg_state,
+      channel_state, rng, metrics)``.
+
+    ``batches`` leaves carry a leading K axis on top of the per-round
+    layout of the configured mode: ``(K, n, T, B, ...)`` for
+    per_client / client_sequential, ``(K, n, B, ...)`` for
+    weighted_grad.  K is baked into the trace via the input shapes —
+    one compile per distinct chunk size, reused across chunks.
+    """
+    round_fn = make_round_fn(loss_fn, client_opt, server_opt, rc,
+                             grad_shardings=grad_shardings)
+
+    if channel_sampler is None:
+
+        def scan_traced(params, server_state, agg_state, batches,
+                        tau_up, tau_dd, A):
+            def body(carry, xs):
+                p, ss, ag = carry
+                b, tu, td = xs
+                p, ss, ag, metrics = round_fn(p, ss, ag, b, tu, td, A)
+                return (p, ss, ag), metrics
+
+            (params, server_state, agg_state), metrics = jax.lax.scan(
+                body, (params, server_state, agg_state),
+                (batches, tau_up, tau_dd),
+            )
+            return params, server_state, agg_state, metrics
+
+        return scan_traced
+
+    sample_fn = channel_sampler
+
+    def scan_sampled(params, server_state, agg_state, batches,
+                     channel_state, rng, A):
+        def body(carry, b):
+            p, ss, ag, cs, key = carry
+            key, sub = jax.random.split(key)
+            tu, td, cs = sample_fn(cs, sub)
+            p, ss, ag, metrics = round_fn(p, ss, ag, b, tu, td, A)
+            return (p, ss, ag, cs, key), metrics
+
+        (params, server_state, agg_state, channel_state, rng), metrics = (
+            jax.lax.scan(
+                body,
+                (params, server_state, agg_state, channel_state, rng),
+                batches,
+            )
+        )
+        return params, server_state, agg_state, channel_state, rng, metrics
+
+    return scan_sampled

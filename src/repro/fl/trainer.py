@@ -20,12 +20,24 @@ Aggregation is a pluggable :class:`~repro.strategies.AggregationStrategy`
 (``strategy=`` accepts a registry name or an instance); stateful
 strategies' carried state (e.g. the memory strategy's replay buffer)
 lives on the trainer and threads through the compiled round.
+
+**Chunked execution** (DESIGN.md §9): ``run(rounds, chunk=K)`` drives
+the multi-round scan engine — K rounds compiled into one device program
+(:func:`~repro.fl.round.make_scan_round_fn`), connectivity served as a
+bulk ``channel.trace`` per chunk, batches pre-stacked in one vectorized
+gather with the next chunk prepared while the device executes the
+current one, and per-round metrics bulk-appended from the stacked
+``(K,)`` outputs.  The trajectory is bitwise-identical to the per-round
+loop: both consume the same channel/batch streams and the scan body *is*
+the loop's round function.  Adaptive re-optimization and eval stay
+correct by construction — the chunk size must divide their cadences (and
+re-opts then land exactly on chunk boundaries); otherwise the trainer
+falls back to the per-round loop.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -37,8 +49,8 @@ from repro.channel.base import ChannelProcess, StaticChannel
 from repro.channel.schedule import AdaptiveWeightSchedule
 from repro.core import LinkModel, variance_S
 from repro.core.flatten import flat_spec
-from repro.data.pipeline import ClientDataset
-from repro.fl.round import RoundConfig, make_round_fn
+from repro.data.pipeline import ClientDataset, stack_chunk_batches
+from repro.fl.round import RoundConfig, make_round_fn, make_scan_round_fn
 from repro.optim import Optimizer
 
 Params = Any
@@ -51,6 +63,11 @@ class TrainLog:
     eval_rounds: List[int] = dataclasses.field(default_factory=list)
     eval_metrics: List[Dict[str, float]] = dataclasses.field(default_factory=list)
     participation: List[float] = dataclasses.field(default_factory=list)
+    # wire-format-aware uplink accounting: bits-on-air delivered to the PS
+    # that round (participation x flat-dim x the active codec's
+    # bits-per-coordinate) — np.cumsum(log.uplink_bits) is the x-axis of a
+    # loss-vs-bytes curve
+    uplink_bits: List[float] = dataclasses.field(default_factory=list)
     # realized sum of scalar aggregation weights (E = 1 when unbiased);
     # its dispersion is the realized counterpart of the variance proxy S.
     # NaN for strategies with no scalar collapse (e.g. memory).
@@ -127,69 +144,176 @@ class FLTrainer:
             aggregation=self.strategy,
         )
         self.rc = rc
+        self._loss_fn = loss_fn
+        self._client_opt = client_opt
         self.server_opt = server_opt
         self.server_state = server_opt.init(init_params)
         self.agg_state = self.strategy.init_state(n, flat_spec(init_params).d)
         self._round_fn = jax.jit(make_round_fn(loss_fn, client_opt, server_opt, rc))
+        self._scan_fn = None  # built on first chunked run
         self.log = TrainLog()
 
     # ------------------------------------------------------------------
-    def _stack_batches(self) -> Dict[str, np.ndarray]:
-        """(n_clients, T, B, ...) stacked local-step batches."""
-        T = self.rc.local_steps
-        per_client = []
-        for c in self.clients:
-            steps = [c.next_batch() for _ in range(T)]
-            per_client.append({k: np.stack([s[k] for s in steps]) for k in steps[0]})
-        out = {k: np.stack([pc[k] for pc in per_client]) for k in per_client[0]}
-        if self.rc.mode == "weighted_grad":
-            out = {k: v[:, 0] for k, v in out.items()}  # T==1 collapse
+    def _stack_batches(self, rounds: int = 1) -> Dict[str, np.ndarray]:
+        """Stacked local-step batches: ``(n, T, B, ...)`` for ``rounds=1``
+        (the per-round loop) or ``(rounds, n, T, B, ...)`` for a chunk —
+        one vectorized gather per client, same RNG stream either way."""
+        out = stack_chunk_batches(self.clients, self.rc.local_steps, rounds)
+        if rounds == 1:
+            out = {k: v[0] for k, v in out.items()}
+            if self.rc.mode == "weighted_grad":
+                out = {k: v[:, 0] for k, v in out.items()}  # T==1 collapse
+        elif self.rc.mode == "weighted_grad":
+            out = {k: v[:, :, 0] for k, v in out.items()}
         return out
 
-    def run(self, rounds: int, *, eval_every: int = 0, verbose: bool = False) -> TrainLog:
-        start = self.log.rounds[-1] + 1 if self.log.rounds else 0
-        for r in range(start, start + rounds):
-            tau_up, tau_dd = self.channel.tau_for_round(r)
-            batches = self._stack_batches()
-            self.params, self.server_state, self.agg_state, metrics = self._round_fn(
-                self.params,
-                self.server_state,
-                self.agg_state,
-                jax.tree.map(jnp.asarray, batches),
-                jnp.asarray(tau_up, jnp.float32),
-                jnp.asarray(tau_dd, jnp.float32),
-                self.A,
+    # ------------------------------------------------------------------
+    def _ingest_adaptive(self, r: int, tau_up: np.ndarray, tau_dd: np.ndarray,
+                         verbose: bool) -> bool:
+        """Feed one round's realization to the adaptive schedule; swap in
+        the fresh alpha (and log the event) on re-opt rounds."""
+        A_new = self.adaptive.step(r, tau_up, tau_dd)
+        if A_new is None:
+            return False
+        self.A = jnp.asarray(A_new, jnp.float32)
+        true_m = self.channel.model_for_round(r)
+        info = self.adaptive.events[-1]
+        self.log.reopt_rounds.append(r)
+        self.log.est_p_err.append(self.adaptive.estimator.errors(true_m)["p"])
+        self.log.S_est.append(float(info["S_est"]))
+        self.log.S_true.append(float(variance_S(true_m, A_new)))
+        if verbose:
+            print(
+                f"  round {r+1:4d}  re-opt alpha: "
+                f"S_est={info['S_est']:.3f} "
+                f"S_true={self.log.S_true[-1]:.3f} "
+                f"p_err={self.log.est_p_err[-1]:.3f}"
             )
-            self.log.rounds.append(r)
-            self.log.loss.append(float(metrics["loss"]))
-            self.log.participation.append(float(metrics["participation"]))
-            self.log.weight_sums.append(float(metrics["weight_sum"]))
+        return True
+
+    def _maybe_eval(self, r: int, eval_every: int, verbose: bool) -> None:
+        if eval_every and (r + 1) % eval_every == 0 and self.eval_fn is not None:
+            em = self.eval_fn(self.params)
+            self.log.eval_rounds.append(r)
+            self.log.eval_metrics.append({k: float(v) for k, v in em.items()})
+            if verbose:
+                print(f"  round {r+1:4d}  loss={self.log.loss[-1]:.4f}  " +
+                      "  ".join(f"{k}={v:.4f}" for k, v in em.items()))
+        elif verbose and (r + 1) % 10 == 0:
+            print(f"  round {r+1:4d}  loss={self.log.loss[-1]:.4f}")
+
+    # ------------------------------------------------------------------
+    def _run_one(self, r: int, eval_every: int, verbose: bool) -> None:
+        """One communication round through the per-round compiled fn."""
+        tau_up, tau_dd = self.channel.tau_for_round(r)
+        batches = self._stack_batches()
+        self.params, self.server_state, self.agg_state, metrics = self._round_fn(
+            self.params,
+            self.server_state,
+            self.agg_state,
+            jax.tree.map(jnp.asarray, batches),
+            jnp.asarray(tau_up, jnp.float32),
+            jnp.asarray(tau_dd, jnp.float32),
+            self.A,
+        )
+        self.log.rounds.append(r)
+        self.log.loss.append(float(metrics["loss"]))
+        self.log.participation.append(float(metrics["participation"]))
+        self.log.uplink_bits.append(float(metrics["uplink_bits"]))
+        self.log.weight_sums.append(float(metrics["weight_sum"]))
+        if self.adaptive is not None:
+            self._ingest_adaptive(r, np.asarray(tau_up), np.asarray(tau_dd),
+                                  verbose)
+        self._maybe_eval(r, eval_every, verbose)
+
+    # ------------------------------------------------------------------
+    def _effective_chunk(self, chunk: int, eval_every: int) -> int:
+        """Largest usable chunk: the requested one when it divides every
+        host-side cadence (adaptive re-opt, eval) — so those events land
+        exactly on chunk boundaries — else 1 (per-round fallback)."""
+        if chunk <= 1:
+            return 1
+        if self.adaptive is not None and self.adaptive.cfg.every % chunk != 0:
+            return 1
+        if eval_every and eval_every % chunk != 0:
+            return 1
+        return chunk
+
+    def _append_chunk_metrics(self, r0: int, k: int, metrics) -> None:
+        """Bulk-append the scan's stacked ``(K,)`` metrics (one device
+        sync for the whole chunk)."""
+        loss = np.asarray(metrics["loss"], np.float64)
+        part = np.asarray(metrics["participation"], np.float64)
+        bits = np.asarray(metrics["uplink_bits"], np.float64)
+        wsum = np.asarray(metrics["weight_sum"], np.float64)
+        self.log.rounds.extend(range(r0, r0 + k))
+        self.log.loss.extend(loss.tolist())
+        self.log.participation.extend(part.tolist())
+        self.log.uplink_bits.extend(bits.tolist())
+        self.log.weight_sums.extend(wsum.tolist())
+
+    def _run_chunks(self, r0: int, n_chunks: int, k: int,
+                    eval_every: int, verbose: bool) -> None:
+        """``n_chunks`` chunks of ``k`` rounds through the scan engine."""
+        if self._scan_fn is None:
+            self._scan_fn = jax.jit(make_scan_round_fn(
+                self._loss_fn, self._client_opt, self.server_opt, self.rc))
+        batches = self._stack_batches(k)
+        for c in range(n_chunks):
+            r = r0 + c * k
+            tau_up, tau_dd = self.channel.trace(r, k)
+            self.params, self.server_state, self.agg_state, metrics = (
+                self._scan_fn(
+                    self.params,
+                    self.server_state,
+                    self.agg_state,
+                    jax.tree.map(jnp.asarray, batches),
+                    jnp.asarray(tau_up, jnp.float32),
+                    jnp.asarray(tau_dd, jnp.float32),
+                    self.A,
+                )
+            )
+            # host prefetch: the dispatch above is async, so stacking the
+            # next chunk's batches overlaps this chunk's device execution
+            batches = self._stack_batches(k) if c + 1 < n_chunks else None
+            self._append_chunk_metrics(r, k, metrics)
             if self.adaptive is not None:
-                A_new = self.adaptive.step(r, tau_up, tau_dd)
-                if A_new is not None:
-                    self.A = jnp.asarray(A_new, jnp.float32)
-                    true_m = self.channel.model_for_round(r)
-                    info = self.adaptive.events[-1]
-                    self.log.reopt_rounds.append(r)
-                    self.log.est_p_err.append(
-                        self.adaptive.estimator.errors(true_m)["p"]
-                    )
-                    self.log.S_est.append(float(info["S_est"]))
-                    self.log.S_true.append(float(variance_S(true_m, A_new)))
-                    if verbose:
-                        print(
-                            f"  round {r+1:4d}  re-opt alpha: "
-                            f"S_est={info['S_est']:.3f} "
-                            f"S_true={self.log.S_true[-1]:.3f} "
-                            f"p_err={self.log.est_p_err[-1]:.3f}"
+                ups, dds = np.asarray(tau_up), np.asarray(tau_dd)
+                for i in range(k):
+                    swapped = self._ingest_adaptive(r + i, ups[i], dds[i],
+                                                    verbose)
+                    if swapped and i != k - 1:  # guarded by _effective_chunk
+                        raise RuntimeError(
+                            "adaptive re-opt fired mid-chunk (round "
+                            f"{r + i}, chunk [{r}, {r + k})); the cadence "
+                            "must be a multiple of chunk"
                         )
-            if eval_every and (r + 1) % eval_every == 0 and self.eval_fn is not None:
-                em = self.eval_fn(self.params)
-                self.log.eval_rounds.append(r)
-                self.log.eval_metrics.append({k: float(v) for k, v in em.items()})
-                if verbose:
-                    print(f"  round {r+1:4d}  loss={self.log.loss[-1]:.4f}  " +
-                          "  ".join(f"{k}={v:.4f}" for k, v in em.items()))
-            elif verbose and (r + 1) % 10 == 0:
-                print(f"  round {r+1:4d}  loss={self.log.loss[-1]:.4f}")
+            self._maybe_eval(r + k - 1, eval_every, verbose)
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: int, *, chunk: int = 1, eval_every: int = 0,
+            verbose: bool = False) -> TrainLog:
+        """Train for ``rounds`` communication rounds.
+
+        ``chunk=K`` compiles K rounds into one device program and syncs
+        to the host only at chunk boundaries (bitwise-identical
+        trajectory to the per-round loop).  Rounds that cannot form an
+        aligned full chunk — leading rounds until the global round
+        counter hits a multiple of K, and the tail remainder — run
+        through the per-round path; if K does not divide the adaptive
+        re-opt cadence or ``eval_every``, the whole run falls back to
+        per-round execution.
+        """
+        start = self.log.rounds[-1] + 1 if self.log.rounds else 0
+        end = start + rounds
+        k = self._effective_chunk(int(chunk), eval_every)
+        r = start
+        while r < end:
+            if k > 1 and r % k == 0 and r + k <= end:
+                n_chunks = (end - r) // k
+                self._run_chunks(r, n_chunks, k, eval_every, verbose)
+                r += n_chunks * k
+            else:
+                self._run_one(r, eval_every, verbose)
+                r += 1
         return self.log

@@ -159,13 +159,18 @@ def param_shardings(cfg: ModelConfig, params_shape: Params, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 
-def train_batch_shardings(mesh: Mesh, mode: str, batch_shape: Params) -> Params:
+def train_batch_shardings(mesh: Mesh, mode: str, batch_shape: Params,
+                          *, scan: bool = False) -> Params:
     """Train batches.  per_client: leading client dim over the client axes.
-    client_sequential: per-step batch dim (axis 2) over the client axes."""
+    client_sequential: per-step batch dim (axis 2) over the client axes.
+    ``scan=True``: leaves carry a leading K-round axis (the chunked scan
+    engine's layout) — the round axis stays unsharded (it is the scan's
+    sequential dim) and the per-round rules shift right by one."""
     from repro.launch.mesh import client_axes
 
     ca = client_axes(mesh)
     caxis = ca if len(ca) > 1 else ca[0]
+    off = 1 if scan else 0
 
     def f(path, leaf):
         ndim = len(leaf.shape)
@@ -176,12 +181,12 @@ def train_batch_shardings(mesh: Mesh, mode: str, batch_shape: Params) -> Params:
             n_full = 1
             for a in full:
                 n_full *= mesh.shape[a]
-            spec[0] = full if leaf.shape[0] % n_full == 0 else caxis
+            spec[off] = full if leaf.shape[off] % n_full == 0 else caxis
         elif mode in ("per_client", "weighted_grad"):
-            spec[0] = caxis  # (C, [T,] B, ...): client dim over client axes
+            spec[off] = caxis  # (C, [T,] B, ...): client dim over client axes
         else:  # client_sequential: shard the per-step batch dim instead
-            if ndim >= 3:
-                spec[2] = caxis  # (C, T, B, ...) -> shard B
+            if ndim >= off + 3:
+                spec[off + 2] = caxis  # (C, T, B, ...) -> shard B
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(f, batch_shape)

@@ -11,6 +11,13 @@ Step kinds per input shape (see configs/base.py):
                             relay consensus, blind PS sum, PS momentum)
   prefill_32k            -> forward logits
   decode_32k / long_500k -> one-token serve step against a deep KV cache
+
+``scan_rounds=K`` turns the train step into the chunked multi-round scan
+engine (DESIGN.md §9): the same round body scanned over a leading K axis
+— batches ``(K, C, T, B, ...)``, channel trace ``tau_up (K, C)`` /
+``tau_dd (K, C, C)``, metrics stacked ``(K,)`` — so the production pjit
+path compiles K communication rounds into one program exactly like
+``FLTrainer.run(chunk=K)`` does on CPU.
 """
 
 from __future__ import annotations
@@ -23,7 +30,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import strategies as strategy_registry
 from repro.configs.base import get_arch
 from repro.core import flatten
-from repro.fl.round import RoundConfig, StrategySpec, make_round_fn
+from repro.fl.round import (
+    RoundConfig,
+    StrategySpec,
+    make_round_fn,
+    make_scan_round_fn,
+)
 
 
 def get_arch_cfg(arch_id: str):
@@ -48,6 +60,7 @@ def build_step(
     aggregation: StrategySpec = "colrel",
     fl_mode: str | None = None,
     cfg_override=None,
+    scan_rounds: int | None = None,
 ) -> Tuple[Any, Dict[str, Any], Any, Any]:
     mode = fl_mode or (cfg_override or get_arch_cfg(arch_id)).fl_mode
     specs = input_specs(arch_id, shape_name, mesh, cfg=cfg_override, fl_mode=mode)
@@ -114,7 +127,19 @@ def build_step(
             unroll=getattr(cfg, "scan_unroll", False),
         )
         psh = shard_rules.param_shardings(cfg, specs["params"], mesh, fsdp=fsdp)
-        round_fn = make_round_fn(
+        make_fn = make_round_fn
+        if scan_rounds:
+            K = int(scan_rounds)
+            make_fn = make_scan_round_fn
+            # leading K-round axis on the scanned per-round inputs
+            SDS = jax.ShapeDtypeStruct
+            specs["batches"] = jax.tree.map(
+                lambda s: SDS((K, *s.shape), s.dtype), specs["batches"])
+            specs["tau_up"] = SDS((K, *specs["tau_up"].shape),
+                                  specs["tau_up"].dtype)
+            specs["tau_dd"] = SDS((K, *specs["tau_dd"].shape),
+                                  specs["tau_dd"].dtype)
+        round_fn = make_fn(
             bundle.loss_fn,
             sgd(CLIENT_LR, weight_decay=CLIENT_WD),
             sgd_momentum(1.0, beta=SERVER_MOMENTUM),
@@ -129,7 +154,8 @@ def build_step(
             lambda: strategy.init_state(rc.n_clients, d_flat)
         )
         ssh = shard_rules.param_shardings(cfg, specs["server_state"], mesh, fsdp=fsdp)
-        bsh = shard_rules.train_batch_shardings(mesh, mode, specs["batches"])
+        bsh = shard_rules.train_batch_shardings(
+            mesh, mode, specs["batches"], scan=bool(scan_rounds))
         rep = NamedSharding(mesh, P())
         st_sh = jax.tree.map(lambda _: rep, agg_state)
         in_sh = (psh, ssh, st_sh, bsh, rep, rep, rep)
@@ -137,6 +163,7 @@ def build_step(
             "loss": rep,
             "delta_norm": rep,
             "participation": rep,
+            "uplink_bits": rep,
             "weight_sum": rep,
         }
         out_sh = (psh, ssh, st_sh, metrics_sh)

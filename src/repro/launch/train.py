@@ -6,8 +6,17 @@ pjits the round function with the sharding rules; on this CPU container
 it runs the same code single-device with the reduced (smoke) config —
 the end-to-end driver exercised in CI.
 
+Connectivity is served by a :class:`~repro.channel.ChannelProcess`
+(``--channel`` selects any preset from ``repro/configs/channels.py`` —
+static i.i.d., bursty Gilbert–Elliott, mobility), and ``--chunk K``
+switches to the compiled multi-round scan engine: K rounds per device
+program, channel taus delivered as one bulk trace per chunk, metrics
+synced to the host once per chunk (DESIGN.md §9).
+
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
         --rounds 10 --smoke
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --rounds 64 --chunk 16 --channel markov --smoke
 """
 
 from __future__ import annotations
@@ -21,10 +30,10 @@ import numpy as np
 
 from repro import strategies as strategy_registry
 from repro.configs.base import get_arch
+from repro.configs.channels import CHANNEL_PRESETS, make_channel
 from repro.core import optimize_weights, topology
-from repro.core.connectivity import sample_round
 from repro.core.flatten import flat_spec
-from repro.fl.round import RoundConfig, make_round_fn
+from repro.fl.round import RoundConfig, make_round_fn, make_scan_round_fn
 from repro.models import build, count_params
 from repro.optim import sgd, sgd_momentum
 
@@ -43,6 +52,12 @@ def main():
                     help="aggregation strategy (repro.strategies registry)")
     ap.add_argument("--fused-kernel", action="store_true",
                     help="flatten-once fused Pallas aggregation (colrel only)")
+    ap.add_argument("--channel", default="static",
+                    choices=sorted(CHANNEL_PRESETS),
+                    help="connectivity dynamics preset (repro/configs/channels.py)")
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="rounds per compiled scan chunk (1 = per-round loop)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--p-up", type=float, default=0.3)
     ap.add_argument("--p-c", type=float, default=0.8)
     args = ap.parse_args()
@@ -52,6 +67,9 @@ def main():
     if args.fused_kernel and args.aggregation != "colrel":
         ap.error(f"--fused-kernel requires --aggregation colrel "
                  f"(got {args.aggregation})")
+    if args.chunk < 1 or args.rounds % args.chunk != 0:
+        ap.error(f"--chunk must be positive and divide --rounds "
+                 f"(got chunk={args.chunk}, rounds={args.rounds})")
     strategy = strategy_registry.get(
         args.aggregation,
         **({"fused": "kernel"} if args.fused_kernel
@@ -67,6 +85,7 @@ def main():
 
     n = args.n_clients
     link_model = topology.fully_connected(n, args.p_up, p_c=args.p_c, rho=1.0)
+    channel = make_channel(args.channel, link_model, n=n, seed=args.seed)
     res = optimize_weights(link_model, sweeps=20, fine_tune_sweeps=20)
     print(f"COPT-alpha: S {res.S_init:.2f} -> {res.S:.2f}")
     A = jnp.asarray(res.A, jnp.float32)
@@ -74,30 +93,60 @@ def main():
     rc = RoundConfig(n_clients=n, local_steps=args.local_steps,
                      mode="per_client", aggregation=strategy)
     server_opt = sgd_momentum(1.0, beta=0.9)
-    round_fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.25), server_opt, rc))
     sstate = server_opt.init(params)
     agg_state = strategy.init_state(n, flat_spec(params).d)
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     V, S, B, T = cfg.vocab_size, args.seq_len, args.batch, args.local_steps
-    for r in range(args.rounds):
-        tau_up, tau_dd = sample_round(link_model, rng)
-        toks = rng.integers(0, V, size=(n, T, B, S + 1), dtype=np.int32)
+
+    def make_batches(lead: tuple) -> dict:
+        toks = rng.integers(0, V, size=(*lead, S + 1), dtype=np.int32)
         batches = {"tokens": jnp.asarray(toks[..., :-1]),
                    "labels": jnp.asarray(toks[..., 1:])}
         if cfg.frontend_tokens:
             batches["prefix"] = jnp.asarray(
-                rng.normal(size=(n, T, B, cfg.frontend_tokens, cfg.d_model)),
+                rng.normal(size=(*lead, cfg.frontend_tokens, cfg.d_model)),
                 cfg.jdtype)
+        return batches
+
+    if args.chunk == 1:
+        round_fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.25), server_opt, rc))
+        for r in range(args.rounds):
+            tau_up, tau_dd = channel.tau_for_round(r)
+            batches = make_batches((n, T, B))
+            t0 = time.perf_counter()
+            params, sstate, agg_state, metrics = round_fn(
+                params, sstate, agg_state, batches,
+                jnp.asarray(tau_up, jnp.float32), jnp.asarray(tau_dd, jnp.float32), A)
+            jax.block_until_ready(metrics["loss"])
+            print(f"round {r:3d}  loss={float(metrics['loss']):.4f}  "
+                  f"participants={int(metrics['participation'])}/{n}  "
+                  f"|delta|={float(metrics['delta_norm']):.3f}  "
+                  f"({time.perf_counter() - t0:.2f}s)")
+        return
+
+    # chunked scan engine: K rounds per device program, one host sync per
+    # chunk; taus come from the channel's bulk trace service
+    K = args.chunk
+    scan_fn = jax.jit(make_scan_round_fn(bundle.loss_fn, sgd(0.25), server_opt, rc))
+    for c in range(args.rounds // K):
+        r0 = c * K
+        tau_up, tau_dd = channel.trace(r0, K)
+        batches = make_batches((K, n, T, B))
         t0 = time.perf_counter()
-        params, sstate, agg_state, metrics = round_fn(
+        params, sstate, agg_state, metrics = scan_fn(
             params, sstate, agg_state, batches,
             jnp.asarray(tau_up, jnp.float32), jnp.asarray(tau_dd, jnp.float32), A)
         jax.block_until_ready(metrics["loss"])
-        print(f"round {r:3d}  loss={float(metrics['loss']):.4f}  "
-              f"participants={int(metrics['participation'])}/{n}  "
-              f"|delta|={float(metrics['delta_norm']):.3f}  "
-              f"({time.perf_counter() - t0:.2f}s)")
+        dt = time.perf_counter() - t0
+        loss = np.asarray(metrics["loss"])
+        part = np.asarray(metrics["participation"])
+        bits = float(np.sum(np.asarray(metrics["uplink_bits"])))
+        print(f"rounds {r0:3d}-{r0 + K - 1:3d}  "
+              f"loss={loss[0]:.4f}->{loss[-1]:.4f}  "
+              f"participants(mean)={part.mean():.1f}/{n}  "
+              f"uplink={bits / 8e6:.1f} MB  "
+              f"({dt:.2f}s, {K / dt:.1f} rounds/s)")
 
 
 if __name__ == "__main__":

@@ -96,6 +96,15 @@ class AggregationStrategy:
         del model, A
         return self
 
+    def wire_bits_per_coord(self, d: int) -> float:
+        """Average uplink wire cost per update coordinate (bits), for the
+        bits-on-air accounting in the round metrics.  Schemes that ship
+        uncoded f32 updates (everything but ``quantized``) cost 32;
+        codec-compressed strategies report their
+        :class:`~repro.wire.CodecDescriptor`'s ``bits_per_coord``."""
+        del d
+        return 32.0
+
     # -- the three representations --------------------------------------
     def weights(self, tau_up: jax.Array, tau_dd: jax.Array,
                 A: jax.Array) -> Optional[jax.Array]:

@@ -97,6 +97,9 @@ class QuantizedStrategy(AggregationStrategy):
     def init_state(self, n: int, d: int) -> State:
         return (self.codec.init_state(n, d), self.inner.init_state(n, d))
 
+    def wire_bits_per_coord(self, d: int) -> float:
+        return self.codec.descriptor(d).bits_per_coord
+
     # -- the wire --------------------------------------------------------
     def _debias(self, decoded, d: int):
         """The unbiasedness-correction hook: divide out the codec's
