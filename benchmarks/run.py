@@ -26,6 +26,7 @@ def all_benches():
         quant_bench,
         roofline_report,
         scan_bench,
+        shard_bench,
         strategy_bench,
         theory,
     )
@@ -45,6 +46,7 @@ def all_benches():
         "strategies": strategy_bench.bench_strategy_matrix,
         "quant": quant_bench.bench_quant,
         "scan": scan_bench.bench_scan_engine,
+        "shard_bench": shard_bench.bench_shard,
     }
 
 

@@ -1,0 +1,180 @@
+"""Population-scale sweep: block-sparse clustered relaying vs the dense
+oracle through the compiled scan engine.
+
+For n in {64, 256, 1024, 4096, 16384} clients (C = n/16 clusters of
+m = 16), runs K communication rounds of the same per_client quadratic
+task through ``make_scan_round_fn`` twice:
+
+* **dense** — the ``colrel`` strategy on the dense form of the clustered
+  topology: ``tau_dd`` traces are ``(K, n, n)``, the relay mix contracts
+  the full ``(n, n)`` mixing matrix (O(n^2 d) per round).
+* **clustered** — the ``clustered`` strategy on the block layout:
+  ``(K, C, m, m)`` traces, per-cluster relay mix (O(C m^2 d)), the dense
+  mask never materializes.
+
+Both consume per-cluster COPT-alpha weights (every cluster of
+``topology.clustered_blocks`` is identical, so one O(m^2) Gauss-Seidel
+solve serves all C clusters); with C = 1 the clustered path reproduces
+dense bitwise (pinned in tests/test_clustered.py), so this is the same
+math at two storage layouts.
+
+Reported per size: rounds/sec (compile excluded) and the compiled
+program's memory footprint (argument + temp + output bytes from XLA's
+``memory_analysis``).  The dense oracle is skipped above
+``n=4096`` — its trace alone would be K x n^2 floats — which is the
+point of the block layout.  Emits ``BENCH_shard.json``; the CI gate
+asserts the clustered path is >= 3x rounds/sec (and smaller) than dense
+at n = 1024 (``SHARD_BENCH_MIN_SPEEDUP`` / ``SHARD_BENCH_MAX_N``
+override for throttled runners / smoke sweeps).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import strategies
+from repro.channel import ClusteredStaticChannel, StaticChannel
+from repro.core import optimize_weights, topology
+from repro.core.blocks import ClusterSpec, block_diag_from_blocks
+from repro.fl.round import RoundConfig, make_scan_round_fn
+from repro.optim import sgd, sgd_momentum
+
+from .common import Row
+
+SIZES = (64, 256, 1024, 4096, 16384)
+M = 16            # cluster size (C = n / M clusters)
+K = 4             # scan rounds per compiled program
+D = 64            # model dim of the quadratic task
+DENSE_MAX = 4096  # dense traces above this are K x n^2 floats — skipped
+GATE_N = 1024
+_ITERS = {64: 8, 256: 8, 1024: 4, 4096: 2, 16384: 1}
+
+
+def _mem_bytes(compiled) -> int:
+    mem = compiled.memory_analysis()
+    total = 0
+    for a in ("argument_size_in_bytes", "temp_size_in_bytes",
+              "output_size_in_bytes"):
+        v = getattr(mem, a, None)
+        if v is not None:
+            total += int(v)
+    return total
+
+
+def _setup(n: int, clustered: bool):
+    """(compiled_scan, args) for K rounds at population n, one layout."""
+    model = topology.clustered_blocks(n, 0.5, M, p_intra=0.8, rho=1.0)
+    # every cluster of clustered_blocks is identical: one per-cluster
+    # COPT-alpha solve (O(m^2)) broadcasts to all C blocks exactly
+    res = optimize_weights(model.cluster_model(0), sweeps=10,
+                           fine_tune_sweeps=5)
+    Ab = np.broadcast_to(res.A.astype(np.float32), (model.C, M, M)).copy()
+
+    # block=K: buffer exactly the K rounds consumed — the default 256-round
+    # block would be a 256 x n^2 tau buffer (17 GB at n=4096) for 4 rounds
+    if clustered:
+        channel = ClusteredStaticChannel(model, seed=0, block=K)
+        strategy = strategies.get("clustered")
+        A = jnp.asarray(Ab)
+    else:
+        channel = StaticChannel(model.to_dense(), seed=0, block=K)
+        strategy = strategies.get("colrel")
+        A = jnp.asarray(block_diag_from_blocks(Ab, ClusterSpec(n, M)))
+    tau_up, tau_dd = channel.trace(0, K)
+
+    H = np.diag(np.linspace(1.0, 8.0, D)).astype(np.float32)
+    Hj = jnp.asarray(H)
+
+    def loss_fn(params, batch):
+        d = params["x"] - batch["t"][0]
+        return 0.5 * d @ (Hj @ d), {}
+
+    rng = np.random.default_rng(7)
+    batches = {"t": jnp.asarray(
+        rng.normal(size=(K, n, 1, 1, D)).astype(np.float32))}
+    rc = RoundConfig(n_clients=n, local_steps=1, mode="per_client",
+                     aggregation=strategy)
+    scan_fn = make_scan_round_fn(loss_fn, sgd(0.1),
+                                 sgd_momentum(1.0, beta=0.9), rc)
+    params = {"x": jnp.zeros((D,), jnp.float32)}
+    server_state = sgd_momentum(1.0, beta=0.9).init(params)
+    args = (params, server_state, (), batches,
+            jnp.asarray(tau_up, jnp.float32),
+            jnp.asarray(tau_dd, jnp.float32), A)
+    compiled = jax.jit(scan_fn).lower(*args).compile()
+    return compiled, args
+
+
+def _time_one(n: int, clustered: bool) -> dict:
+    compiled, args = _setup(n, clustered)
+    peak = _mem_bytes(compiled)
+    jax.block_until_ready(compiled(*args))  # warm (allocs, thunk caches)
+    iters = _ITERS[n]
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = compiled(*args)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    return {
+        "rounds_per_sec": round(iters * K / dt, 2),
+        "peak_bytes": peak,
+        "us_per_round": dt * 1e6 / (iters * K),
+    }
+
+
+def bench_shard() -> List[Row]:
+    max_n = int(os.environ.get("SHARD_BENCH_MAX_N", str(SIZES[-1])))
+    floor = float(os.environ.get("SHARD_BENCH_MIN_SPEEDUP", "3"))
+    rows: List[Row] = []
+    sweep = []
+    gate = None
+    for n in SIZES:
+        if n > max_n:
+            continue
+        entry = {"n": n, "C": n // M, "m": M}
+        c = _time_one(n, clustered=True)
+        entry["clustered"] = {k: c[k] for k in ("rounds_per_sec", "peak_bytes")}
+        rows.append((f"shard/clustered_n{n}", c["us_per_round"],
+                     f"rounds_per_sec={c['rounds_per_sec']}"))
+        if n <= DENSE_MAX:
+            d = _time_one(n, clustered=False)
+            entry["dense"] = {k: d[k] for k in ("rounds_per_sec", "peak_bytes")}
+            entry["speedup"] = round(c["rounds_per_sec"] / d["rounds_per_sec"], 2)
+            entry["mem_ratio"] = round(d["peak_bytes"] / max(c["peak_bytes"], 1), 2)
+            rows.append((f"shard/dense_n{n}", d["us_per_round"],
+                         f"rounds_per_sec={d['rounds_per_sec']};"
+                         f"speedup={entry['speedup']}x;"
+                         f"mem_ratio={entry['mem_ratio']}x"))
+            if n == GATE_N:
+                gate = entry
+        else:
+            entry["dense"] = None  # K x n^2 trace: the layout being avoided
+            rows.append((f"shard/dense_n{n}", 0.0, "skipped=dense_trace_too_large"))
+        sweep.append(entry)
+
+    with open("BENCH_shard.json", "w") as f:
+        json.dump({
+            "cluster_size": M,
+            "scan_rounds": K,
+            "model_dim": D,
+            "dense_max_n": DENSE_MAX,
+            "sweep": sweep,
+            "gate_n": GATE_N,
+            "gate_floor": floor,
+        }, f, indent=1)
+
+    if gate is not None:
+        assert gate["speedup"] >= floor, (
+            f"clustered speedup {gate['speedup']}x < {floor}x at n={GATE_N} "
+            f"(m={M}, K={K})")
+        assert gate["clustered"]["peak_bytes"] < gate["dense"]["peak_bytes"], (
+            f"clustered peak {gate['clustered']['peak_bytes']} not below "
+            f"dense {gate['dense']['peak_bytes']} at n={GATE_N}")
+    return rows

@@ -34,6 +34,14 @@ from .base import (
     stacked_trace,
     static_scan_sampler,
 )
+from .clustered import (
+    ClusteredGEParams,
+    ClusteredMarkovChannel,
+    ClusteredStaticChannel,
+    clustered_ge_scan_sampler,
+    clustered_static_scan_sampler,
+    gilbert_elliott_clustered,
+)
 from .estimator import LinkEstimator
 from .markov import (
     GEParams,
@@ -53,6 +61,12 @@ __all__ = [
     "StaticChannel",
     "MarkovChannel",
     "MobilityChannel",
+    "ClusteredStaticChannel",
+    "ClusteredMarkovChannel",
+    "ClusteredGEParams",
+    "gilbert_elliott_clustered",
+    "clustered_static_scan_sampler",
+    "clustered_ge_scan_sampler",
     "GEParams",
     "channel_key",
     "gilbert_elliott",

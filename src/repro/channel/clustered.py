@@ -1,0 +1,342 @@
+"""Clustered channels: tau_dd served in (C, m, m) block form.
+
+The dense channels (``base.py`` / ``markov.py``) emit an (n, n) tau_dd
+per round — 2 GiB/round of mostly-structural zeros at n = 2^14 under
+clustering.  These processes sample only the links that exist: one
+uniform (or one Gilbert–Elliott gate chain) per *intra-cluster* pair,
+C·m(m-1)/2 lanes total instead of n(n-1)/2, and assemble the block
+tensor directly with the same per-pair lane gather as the dense
+samplers — ``pair_lane_table(m)`` applied per cluster (the table indexes
+locally, so one (m², ) table serves every cluster).
+
+The round function treats tau_dd as an opaque traced slot, so the block
+layout flows through ``make_scan_round_fn`` / ``FLTrainer`` unchanged;
+only the ``clustered`` strategy interprets it.  Everything mirrors the
+dense subsystem: :class:`ClusteredStaticChannel` is the paper's i.i.d.
+law restricted to the block support, :class:`ClusteredMarkovChannel`
+carries one GE gate per uplink and per intra-cluster pair (same
+15-bit-lattice integer thresholds, same marginal-preservation fitting as
+``gilbert_elliott``), and both expose ``scan_sampler()`` for the
+no-trace in-scan mode.  ``trace`` / ``tau_for_round`` read the same
+stream, so loop- and scan-driven training see identical draws.
+
+Block tensors shard along their leading cluster axis — the same
+``clients`` mesh axis as the (n, d) update stack (DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel.base import BlockBufferedChannel, pair_lane_table
+from repro.channel.markov import _LATTICE, channel_key
+from repro.core.blocks import ClusteredLinkModel
+
+__all__ = [
+    "ClusteredGEParams",
+    "gilbert_elliott_clustered",
+    "clustered_static_scan_sampler",
+    "clustered_ge_scan_sampler",
+    "ClusteredStaticChannel",
+    "ClusteredMarkovChannel",
+]
+
+_EPS = 1e-12
+
+
+def _pair_params(model: ClusteredLinkModel):
+    """Per-cluster unordered-pair marginals: (C, mp) each, mp = m(m-1)/2."""
+    m = model.m
+    iu, ju = np.triu_indices(m, k=1)
+    pij = model.Pb[:, iu, ju]
+    pji = model.Pb[:, ju, iu]
+    e = model.Eb[:, iu, ju]
+    return pij, pji, e
+
+
+def _block_gather(tij, tji, lane):
+    """Assemble (C, m, m) from per-pair draws ``tij``/``tji`` (..., C, mp)
+    via the local pair-lane table — the blocked twin of the dense
+    samplers' (n, n) gather, one gather per cluster row."""
+    C, mp = tij.shape[-2:]
+    m_sq = lane.shape[0]
+    ones = jnp.ones((*tij.shape[:-1], 1), bool)
+    cat = jnp.concatenate([tij, tji, ones], axis=-1)  # (..., C, 2mp+1)
+    out = jnp.take(cat, lane, axis=-1)  # (..., C, m*m)
+    m = int(np.sqrt(m_sq))
+    return out.reshape(*tij.shape[:-1], m, m).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# i.i.d. clustered sampling (the paper's law on the block support)
+# ---------------------------------------------------------------------------
+
+
+def clustered_static_scan_sampler(model: ClusteredLinkModel):
+    """In-scan i.i.d. sampler: ``sample_fn(state, key) -> (tau_up (n,),
+    tau_b (C, m, m), state)`` — the block twin of
+    :func:`repro.channel.base.static_scan_sampler`, same one-uniform
+    reciprocity coupling per pair, carried state ``()``."""
+    C, m = model.C, model.m
+    n = model.n
+    pij, pji, e = _pair_params(model)
+    p = jnp.asarray(model.p, jnp.float32)
+    pij = jnp.asarray(pij, jnp.float32)
+    pji = jnp.asarray(pji, jnp.float32)
+    e = jnp.asarray(e, jnp.float32)
+    lane = jnp.asarray(pair_lane_table(m))
+
+    def init_fn(key):
+        del key
+        return ()
+
+    def sample_fn(state, key):
+        k1, k2 = jax.random.split(key)
+        tau_up = (jax.random.uniform(k1, (n,)) < p).astype(jnp.float32)
+        uu = jax.random.uniform(k2, pij.shape)  # (C, mp)
+        both = uu < e
+        tij = both | ((uu >= e) & (uu < pij))
+        tji = both | ((uu >= pij) & (uu < pij + pji - e))
+        return tau_up, _block_gather(tij, tji, lane), state
+
+    return init_fn, sample_fn
+
+
+@partial(jax.jit, static_argnames=("rounds",))
+def _static_block_trace(p, pij, pji, e, lane, key, *, rounds: int):
+    """Bulk i.i.d. service: (R, n) uplinks + (R, C, m, m) blocks in one
+    compiled pass (two bulk uniform draws, no per-round host loop)."""
+    k1, k2 = jax.random.split(key)
+    ups = (jax.random.uniform(k1, (rounds, *p.shape)) < p).astype(jnp.float32)
+    uu = jax.random.uniform(k2, (rounds, *pij.shape))
+    both = uu < e
+    tij = both | ((uu >= e) & (uu < pij))
+    tji = both | ((uu >= pij) & (uu < pij + pji - e))
+    return ups, _block_gather(tij, tji, lane)
+
+
+class ClusteredStaticChannel(BlockBufferedChannel):
+    """The paper's i.i.d. channel on the block support, block-buffered.
+
+    ``tau_for_round`` returns ``(tau_up (n,), tau_b (C, m, m))``;
+    ``trace`` the bulk ``(K, n)`` / ``(K, C, m, m)`` forms.  Buffers are
+    generated on device in one fused pass per block."""
+
+    def __init__(self, model: ClusteredLinkModel, seed: int = 0, block: int = 256):
+        super().__init__(model.n, block)
+        self.model = model
+        pij, pji, e = _pair_params(model)
+        self._p = jnp.asarray(model.p, jnp.float32)
+        self._pij = jnp.asarray(pij, jnp.float32)
+        self._pji = jnp.asarray(pji, jnp.float32)
+        self._e = jnp.asarray(e, jnp.float32)
+        self._lane = jnp.asarray(pair_lane_table(model.m))
+        self._key = channel_key(seed)
+
+    def _generate_block(self, rounds: int):
+        self._key, k = jax.random.split(self._key)
+        return _static_block_trace(
+            self._p, self._pij, self._pji, self._e, self._lane, k,
+            rounds=rounds,
+        )
+
+    def model_for_round(self, r: int) -> ClusteredLinkModel:
+        return self.model
+
+    def scan_sampler(self):
+        """``(init_fn, sample_fn)`` drawing i.i.d. block rounds in-scan."""
+        return clustered_static_scan_sampler(self.model)
+
+
+# ---------------------------------------------------------------------------
+# Gilbert–Elliott clustered chains
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusteredGEParams:
+    """GE chain parameters on the block support: one gate per uplink and
+    per intra-cluster unordered pair (``(C, mp)``, pair index local to
+    the cluster via ``np.triu_indices(m, 1)``)."""
+
+    model: ClusteredLinkModel
+    pi_up: np.ndarray   # (n,)
+    lam_up: np.ndarray  # (n,)
+    pi_dd: np.ndarray   # (C, mp)
+    lam_dd: np.ndarray  # (C, mp)
+
+    @property
+    def n(self) -> int:
+        return self.model.n
+
+
+def gilbert_elliott_clustered(
+    model: ClusteredLinkModel,
+    memory=0.9,
+    occupancy=None,
+) -> ClusteredGEParams:
+    """Fit per-link GE chains matching ``model``'s marginals exactly —
+    :func:`repro.channel.markov.gilbert_elliott` restricted to the links
+    that exist (the fitting math is elementwise per link, so the block
+    form is the same formulas on (C, mp) arrays)."""
+    if isinstance(memory, tuple):
+        lam_up_s, lam_dd_s = memory
+    else:
+        lam_up_s = lam_dd_s = float(memory)
+    for lam in (lam_up_s, lam_dd_s):
+        if not 0.0 <= lam < 1.0:
+            raise ValueError(f"memory must be in [0, 1), got {lam}")
+
+    pij, pji, eij = _pair_params(model)
+    floor_up = model.p
+    floor_dd = np.maximum(np.maximum(pij, pji), pij + pji - eij)
+    if occupancy is None:
+        pi_up, pi_dd = floor_up.copy(), floor_dd.copy()
+    else:
+        if not 0.0 < occupancy <= 1.0:
+            raise ValueError(f"occupancy must be in (0, 1], got {occupancy}")
+        pi_up = np.maximum(floor_up, occupancy)
+        pi_dd = np.maximum(floor_dd, occupancy)
+    pi_up = np.where(floor_up <= 0.0, 1.0, pi_up)
+    pi_dd = np.where(floor_dd <= 0.0, 1.0, pi_dd)
+
+    lam_up = np.where(pi_up >= 1.0, 0.0, np.full(model.n, lam_up_s))
+    lam_dd = np.where(pi_dd >= 1.0, 0.0, np.full(pi_dd.shape, lam_dd_s))
+    return ClusteredGEParams(model, pi_up, lam_up, pi_dd, lam_dd)
+
+
+def _cge_arrays(params: ClusteredGEParams) -> dict:
+    """Integer-threshold device operands (15-bit lattice, uint16 — same
+    quantization argument as the dense sampler; cached on the params)."""
+    cached = getattr(params, "_device_arrays_cache", None)
+    if cached is not None:
+        return cached
+    model = params.model
+    pij, pji, eij = _pair_params(model)
+    pi_dd = np.maximum(params.pi_dd, _EPS)
+    q_up = np.where(params.pi_up > 0,
+                    model.p / np.maximum(params.pi_up, _EPS), 0.0)
+    qij, qji, e_c = pij / pi_dd, pji / pi_dd, eij / pi_dd
+    lattice = lambda p: np.rint(np.clip(p, 0.0, 1.0) * _LATTICE).astype(np.int64)
+    thresh = lambda p: jnp.asarray(lattice(p), jnp.uint16)
+    arrs = dict(
+        t_g_up=thresh((1.0 - params.lam_up) * params.pi_up),
+        t_b_up=thresh((1.0 - params.lam_up) * (1.0 - params.pi_up)),
+        t_g_dd=thresh((1.0 - params.lam_dd) * params.pi_dd),
+        t_b_dd=thresh((1.0 - params.lam_dd) * (1.0 - params.pi_dd)),
+        t_q_up=thresh(q_up),
+        t_qij=thresh(qij),
+        t_e=thresh(e_c),
+        t_mid=jnp.asarray(lattice(qij) + lattice(qji) - lattice(e_c),
+                          jnp.uint16),
+        pair_lane=jnp.asarray(pair_lane_table(model.m)),
+        pi_up=jnp.asarray(params.pi_up, jnp.float32),
+        pi_dd=jnp.asarray(params.pi_dd, jnp.float32),
+    )
+    object.__setattr__(params, "_device_arrays_cache", arrs)
+    return arrs
+
+
+def _cge_emit(arrs, sp, u_dd):
+    """Conditional pair emissions given Good gates ``sp`` (..., C, mp)."""
+    tij = sp & (u_dd < arrs["t_qij"])
+    tji = sp & (
+        (u_dd < arrs["t_e"])
+        | ((u_dd >= arrs["t_qij"]) & (u_dd < arrs["t_mid"]))
+    )
+    return _block_gather(tij, tji, arrs["pair_lane"])
+
+
+def _cge_core(arrs, state, key, *, rounds: int, n: int):
+    """Blocked twin of ``markov._ge_core``: scan the gate chains, emit
+    (R, n) uplinks + (R, C, m, m) blocks.  Same anatomy — one bulk
+    uint16 draw, integer thresholds, gate-only scan payload, vectorized
+    assembly after the loop."""
+    C, mp = arrs["t_qij"].shape
+    cm = C * mp
+    lanes = 2 * n + 2 * cm
+    u16 = jax.random.bits(key, (rounds, lanes), jnp.uint16)
+    u15 = u16 >> jnp.uint16(1)
+    u_gate = u15[:, : n + cm]
+    u_up = u15[:, n + cm : 2 * n + cm]
+    u_dd = u15[:, 2 * n + cm :].reshape(rounds, C, mp)
+    t_g = jnp.concatenate([arrs["t_g_up"], arrs["t_g_dd"].reshape(cm)])
+    t_b = jnp.concatenate([arrs["t_b_up"], arrs["t_b_dd"].reshape(cm)])
+
+    def step(s, u):
+        s = jnp.where(s, u >= t_b, u < t_g)
+        return s, s
+
+    end, gates = jax.lax.scan(step, state, u_gate)
+    su = gates[:, :n]
+    sp = gates[:, n:].reshape(rounds, C, mp)
+    ups = (su & (u_up < arrs["t_q_up"])).astype(jnp.float32)
+    return ups, _cge_emit(arrs, sp, u_dd), end
+
+
+_cge_scan = partial(jax.jit, static_argnames=("rounds", "n"))(_cge_core)
+
+
+def _cge_stationary_state(arrs, key):
+    k1, k2 = jax.random.split(key)
+    su = jax.random.uniform(k1, arrs["pi_up"].shape) < arrs["pi_up"]
+    sp = jax.random.uniform(k2, arrs["pi_dd"].shape) < arrs["pi_dd"]
+    return jnp.concatenate([su, sp.reshape(-1)])
+
+
+def clustered_ge_scan_sampler(params: ClusteredGEParams):
+    """Per-round GE sampler for in-scan use, block layout: the twin of
+    :func:`repro.channel.markov.ge_scan_sampler` with a packed
+    ``(n + C·mp,)`` gate state and (C, m, m) emissions."""
+    arrs = _cge_arrays(params)
+    n = params.n
+    C, mp = arrs["t_qij"].shape
+    cm = C * mp
+    t_g = jnp.concatenate([arrs["t_g_up"], arrs["t_g_dd"].reshape(cm)])
+    t_b = jnp.concatenate([arrs["t_b_up"], arrs["t_b_dd"].reshape(cm)])
+
+    def init_fn(key):
+        return _cge_stationary_state(arrs, key)
+
+    def sample_fn(state, key):
+        u15 = jax.random.bits(key, (2 * n + 2 * cm,), jnp.uint16) >> jnp.uint16(1)
+        u_gate = u15[: n + cm]
+        u_up = u15[n + cm : 2 * n + cm]
+        u_dd = u15[2 * n + cm :].reshape(C, mp)
+        state = jnp.where(state, u_gate >= t_b, u_gate < t_g)
+        su, sp = state[:n], state[n:].reshape(C, mp)
+        ups = (su & (u_up < arrs["t_q_up"])).astype(jnp.float32)
+        return ups, _cge_emit(arrs, sp, u_dd), state
+
+    return init_fn, sample_fn
+
+
+class ClusteredMarkovChannel(BlockBufferedChannel):
+    """GE bursty blockage on the block support, scan-generated ``block``
+    rounds at a time with the chain state carried across blocks."""
+
+    def __init__(self, params: ClusteredGEParams, seed: int = 0, block: int = 256):
+        super().__init__(params.n, block)
+        self.params = params
+        self._arrs = _cge_arrays(params)
+        self._key, k_init = jax.random.split(channel_key(seed))
+        self._state = _cge_stationary_state(self._arrs, k_init)
+
+    def _generate_block(self, rounds: int):
+        self._key, k = jax.random.split(self._key)
+        ups, dds, self._state = _cge_scan(
+            self._arrs, self._state, k, rounds=rounds, n=self.n
+        )
+        return ups, dds
+
+    def model_for_round(self, r: int) -> ClusteredLinkModel:
+        return self.params.model
+
+    def scan_sampler(self):
+        """``(init_fn, sample_fn)`` advancing the gates in-scan."""
+        return clustered_ge_scan_sampler(self.params)

@@ -14,22 +14,38 @@ from .connectivity import (
     sample_round,
     sample_rounds,
 )
+from .blocks import (
+    ClusteredLinkModel,
+    ClusterSpec,
+    block_colrel_round_delta,
+    block_effective_weights,
+    block_relay_mix,
+)
 from .weights import (
+    ClusteredOptResult,
     OptResult,
     fedavg_weights,
     importance_weights,
     initial_weights,
     is_unbiased,
+    is_unbiased_clustered,
     optimize_weights,
+    optimize_weights_clustered,
     unbiasedness_residual,
+    unbiasedness_residual_clustered,
     variance_S,
     variance_Sbar,
 )
 from .aggregation import Aggregation, aggregate
-from . import flatten, relay, topology
+from . import blocks, flatten, relay, topology
 
 __all__ = [
     "LinkModel",
+    "ClusterSpec",
+    "ClusteredLinkModel",
+    "block_relay_mix",
+    "block_effective_weights",
+    "block_colrel_round_delta",
     "reciprocity_matrix",
     "sample_round",
     "sample_rounds",
@@ -42,9 +58,14 @@ __all__ = [
     "fedavg_weights",
     "importance_weights",
     "optimize_weights",
+    "optimize_weights_clustered",
+    "unbiasedness_residual_clustered",
+    "is_unbiased_clustered",
     "OptResult",
+    "ClusteredOptResult",
     "Aggregation",
     "aggregate",
+    "blocks",
     "flatten",
     "relay",
     "topology",

@@ -36,6 +36,14 @@ def n_clients(mesh) -> int:
     return n
 
 
+def client_axis_spec(mesh):
+    """PartitionSpec entry for a client-indexed dim: the client axes as a
+    tuple when several enumerate clients (multi-pod), else the single axis
+    name — the spelling every client-axis sharding rule shares."""
+    ca = client_axes(mesh)
+    return ca if len(ca) > 1 else ca[0]
+
+
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small host-device mesh for tests (requires >= data*model devices)."""
     return jax.make_mesh((data, model), ("data", "model"))

@@ -151,6 +151,11 @@ class FLTrainer:
         self.agg_state = self.strategy.init_state(n, flat_spec(init_params).d)
         self._round_fn = jax.jit(make_round_fn(loss_fn, client_opt, server_opt, rc))
         self._scan_fn = None  # built on first chunked run
+        self._seed = seed
+        # no-trace mode: in-scan sampler fn + carried (channel_state, rng)
+        self._sampled_scan_fn = None
+        self._channel_state = None
+        self._channel_rng = None
         self.log = TrainLog()
 
     # ------------------------------------------------------------------
@@ -290,9 +295,38 @@ class FLTrainer:
                         )
             self._maybe_eval(r + k - 1, eval_every, verbose)
 
+    def _run_chunks_sampled(self, r0: int, k: int,
+                            eval_every: int, verbose: bool) -> None:
+        """One chunk of ``k`` rounds with connectivity drawn *inside* the
+        compiled scan (``make_scan_round_fn(channel_sampler=...)``): no tau
+        tensors ever materialize on host — the channel's gate state and a
+        PRNG key thread through the device program instead."""
+        if self._sampled_scan_fn is None:
+            init_fn, sample_fn = self.channel.scan_sampler()
+            self._sampled_scan_fn = jax.jit(make_scan_round_fn(
+                self._loss_fn, self._client_opt, self.server_opt, self.rc,
+                channel_sampler=sample_fn))
+            key = jax.random.PRNGKey(self._seed)
+            key, sub = jax.random.split(key)
+            self._channel_state = init_fn(sub)
+            self._channel_rng = key
+        batches = self._stack_batches(k)
+        (self.params, self.server_state, self.agg_state,
+         self._channel_state, self._channel_rng, metrics) = self._sampled_scan_fn(
+            self.params,
+            self.server_state,
+            self.agg_state,
+            jax.tree.map(jnp.asarray, batches),
+            self._channel_state,
+            self._channel_rng,
+            self.A,
+        )
+        self._append_chunk_metrics(r0, k, metrics)
+        self._maybe_eval(r0 + k - 1, eval_every, verbose)
+
     # ------------------------------------------------------------------
     def run(self, rounds: int, *, chunk: int = 1, eval_every: int = 0,
-            verbose: bool = False) -> TrainLog:
+            verbose: bool = False, no_trace: bool = False) -> TrainLog:
         """Train for ``rounds`` communication rounds.
 
         ``chunk=K`` compiles K rounds into one device program and syncs
@@ -303,10 +337,41 @@ class FLTrainer:
         through the per-round path; if K does not divide the adaptive
         re-opt cadence or ``eval_every``, the whole run falls back to
         per-round execution.
+
+        ``no_trace=True`` draws connectivity *inside* the compiled scan
+        via the channel's ``scan_sampler()`` (the in-scan sampler of
+        :func:`~repro.fl.round.make_scan_round_fn`): no tau tensors ever
+        cross the host boundary — only the channel's packed gate state
+        and a PRNG key thread through the program.  The draws come from
+        the sampler's own jax PRNG stream, so the trajectory is
+        distributionally identical (same marginals / GE dynamics) but not
+        bitwise equal to the traced path.  Requires a channel exposing
+        ``scan_sampler`` and no adaptive schedule (re-optimization needs
+        the realized taus on host).
         """
         start = self.log.rounds[-1] + 1 if self.log.rounds else 0
         end = start + rounds
         k = self._effective_chunk(int(chunk), eval_every)
+        if no_trace:
+            if not hasattr(self.channel, "scan_sampler"):
+                raise ValueError(
+                    f"no_trace needs a channel with scan_sampler(); "
+                    f"{type(self.channel).__name__} cannot sample in-scan"
+                )
+            if self.adaptive is not None:
+                raise ValueError(
+                    "no_trace is incompatible with adaptive re-optimization: "
+                    "the estimator consumes realized taus on host, which "
+                    "no_trace never materializes"
+                )
+            r = start
+            while r < end:
+                # any chunk size works (no trace stream to stay aligned
+                # with); a short tail just retraces the jit once
+                self._run_chunks_sampled(r, min(k, end - r), eval_every,
+                                         verbose)
+                r += min(k, end - r)
+            return self.log
         r = start
         while r < end:
             if k > 1 and r % k == 0 and r + k <= end:

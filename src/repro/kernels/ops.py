@@ -16,6 +16,7 @@ from .flash_attention import flash_attention_pallas
 from .fused_aggregate import fused_aggregate_pallas
 from .fused_dequant import fused_dequant_aggregate_pallas
 from .fused_memory import fused_memory_update_pallas
+from .relay_block import block_fused_aggregate_pallas, block_relay_mix_pallas
 from .relay_mix import relay_mix_pallas
 from .ssd_scan import ssd_scan_pallas
 
@@ -44,6 +45,38 @@ def fused_aggregate(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array,
              (A.astype(jnp.float32) * tau_dd.astype(jnp.float32).T)) / n
         return w @ updates.astype(jnp.float32)
     return fused_aggregate_pallas(A, tau_up, tau_dd, updates, block_d=block_d)
+
+
+def block_relay_mix(Ab: jax.Array, tau_b: jax.Array, updates: jax.Array,
+                    *, block_d: int = 2048) -> jax.Array:
+    """Blocked consensus Dx~_c = (A_c * tau_c^T) @ Dx_c over (C, m, m)
+    cluster blocks; the dense (n, n) mask is never materialized."""
+    return block_relay_mix_pallas(Ab, tau_b, updates, block_d=block_d,
+                                  interpret=_interpret())
+
+
+def block_fused_aggregate(Ab: jax.Array, tau_up: jax.Array, tau_b: jax.Array,
+                          updates: jax.Array, *,
+                          block_d: int = 2048) -> jax.Array:
+    """One-pass blocked ColRel PS delta over (C, m, m) cluster blocks:
+    (1/n) sum_c tau_c @ ((A_c * tau_c^T) @ Dx_c); output is (d,) fp32."""
+    if _interpret():
+        # Non-TPU deployable op: the same per-cluster collapse in jnp
+        # (identical contraction order to the kernel) — this is the hot
+        # path of every clustered training round and the shard benchmark,
+        # so it must not emulate the tile grid in the interpreter; the
+        # kernel's tiling is validated in tests at reduced d.
+        C, m, _ = Ab.shape
+        n = C * m
+        w = jnp.einsum(
+            "ci,cij->cj",
+            tau_up.astype(jnp.float32).reshape(C, m),
+            Ab.astype(jnp.float32) * jnp.swapaxes(tau_b, 1, 2).astype(jnp.float32),
+        ) / n
+        return jnp.einsum("cj,cjk->k", w,
+                          updates.astype(jnp.float32).reshape(C, m, -1))
+    return block_fused_aggregate_pallas(Ab, tau_up, tau_b, updates,
+                                        block_d=block_d)
 
 
 def fused_dequant_aggregate(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array,

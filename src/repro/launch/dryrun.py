@@ -14,6 +14,7 @@ jax initialization):
 
 import argparse
 import json
+import math
 import time
 import traceback
 from pathlib import Path
@@ -42,6 +43,24 @@ def _cost_dict(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else None
     return cost or {}
+
+
+def _arg_bytes(lower_args, in_sh) -> tuple:
+    """(global, per-shard) argument bytes from the lowering specs and the
+    requested input shardings.  XLA's ``memory_analysis`` prices arguments
+    at their unpartitioned size on some backends, so client-axis-sharded
+    inputs (the (n, d) stacks, tau traces, block tensors) would read as
+    fully replicated; ``Sharding.shard_shape`` gives the true per-device
+    slice."""
+    args = jax.tree.leaves(lower_args)
+    shs = jax.tree.leaves(in_sh)
+    assert len(args) == len(shs), (len(args), len(shs))
+    total = per_shard = 0
+    for a, s in zip(args, shs):
+        nbytes = math.prod(a.shape) * a.dtype.itemsize
+        total += nbytes
+        per_shard += math.prod(s.shard_shape(a.shape)) * a.dtype.itemsize
+    return int(total), int(per_shard)
 
 
 def _tokens_for(shape_name: str, fl_mode: str) -> float:
@@ -167,6 +186,15 @@ def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
         v = getattr(mem, a, None)
         if v is not None:
             mem_attrs[a] = int(v)
+    arg_global, arg_shard = _arg_bytes(lower_args, in_sh)
+    mem_attrs["argument_bytes_global"] = arg_global
+    mem_attrs["argument_bytes_per_shard"] = arg_shard
+    raw = mem_attrs.get("argument_size_in_bytes")
+    if raw is not None and arg_shard < arg_global and raw >= arg_global:
+        # XLA counted sharded arguments at full (replicated) size — report
+        # the true per-shard residency; the raw figure stays for auditing.
+        mem_attrs["argument_size_in_bytes_reported"] = raw
+        mem_attrs["argument_size_in_bytes"] = arg_shard
 
     record = {
         "arch": arch_id,

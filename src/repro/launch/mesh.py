@@ -8,9 +8,11 @@ here unchanged.
 
 from repro.dist.mesh import (  # noqa: F401
     client_axes,
+    client_axis_spec,
     make_debug_mesh,
     make_production_mesh,
     n_clients,
 )
 
-__all__ = ["client_axes", "make_debug_mesh", "make_production_mesh", "n_clients"]
+__all__ = ["client_axes", "client_axis_spec", "make_debug_mesh",
+           "make_production_mesh", "n_clients"]

@@ -22,6 +22,7 @@ on the largest divisible dim.
 
 from __future__ import annotations
 
+import dataclasses
 import re
 from typing import Any, Optional, Tuple
 
@@ -242,3 +243,124 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape: Params) -> Params
 
 def replicated(mesh: Mesh, tree: Params) -> Params:
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# client-axis rules (FL round operands)
+# ---------------------------------------------------------------------------
+
+_CLIENTS = "clients"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRule:
+    """scalax-style declarative sharding rule (SNIPPETS.md §1).
+
+    Ordered ``(path-pattern, templates)`` pairs: the first pattern that
+    matches a leaf's path selects its template set, and the first template
+    whose length equals the leaf's ndim (after skipping ``skip_leading``
+    scan dims) is applied dim-by-dim.  The placeholder ``"clients"``
+    resolves to the mesh's client axes (``pod``/``data``); any other
+    entry names a mesh axis literally.  An axis that does not divide its
+    dim is dropped (that dim replicates), so one rule serves every mesh
+    shape — including the 1-device test mesh, where everything
+    degenerates to replication.
+    """
+
+    rules: Tuple[Tuple[str, Tuple[Tuple[Optional[str], ...], ...]], ...]
+    # leading dims excluded from matching (the scan engine's K-round axis:
+    # it is the scan's sequential dim and must stay unsharded)
+    skip_leading: int = 0
+
+    def spec(self, path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+        from repro.launch.mesh import client_axes
+
+        dims = shape[self.skip_leading:]
+        spec: list = [None] * len(shape)
+        for pat, templates in self.rules:
+            if not re.search(pat, path):
+                continue
+            for tmpl in templates:
+                if len(tmpl) != len(dims):
+                    continue
+                for i, ax in enumerate(tmpl):
+                    if ax is None:
+                        continue
+                    axes = client_axes(mesh) if ax == _CLIENTS else (ax,)
+                    size = int(np.prod([_axis_size(mesh, a) for a in axes]))
+                    if size > 1 and dims[i] % size == 0:
+                        spec[self.skip_leading + i] = (
+                            axes if len(axes) > 1 else axes[0]
+                        )
+                break
+            break
+        return P(*spec)
+
+    def shardings(self, mesh: Mesh, tree: Params) -> Params:
+        """NamedShardings for a (shape) pytree, one leaf at a time."""
+
+        def f(path, leaf):
+            return NamedSharding(mesh, self.spec(_path_str(path), leaf.shape, mesh))
+
+        return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def fl_round_rule(*, scan: bool = False) -> ShardingRule:
+    """Connectivity operands of the FL round, sharded along the client axis.
+
+    ``tau_up (n,)`` shards its client dim; dense ``tau_dd`` / ``A (n, n)``
+    shard rows (the relaying client — the contraction's output axis);
+    block ``(C, m, m)`` cluster tensors shard the cluster axis.  All use
+    the same client mesh axes as the ``(n, ...)`` update stack, so the
+    relay mix is shard-local and only the final blind PS sum crosses
+    shards (one (d,) all-reduce).  ``scan=True`` skips the leading
+    K-round axis of the chunked engine's trace layout.
+    """
+    return ShardingRule(
+        rules=(
+            (r"(^|/)tau_up$", ((_CLIENTS,),)),
+            (r"(^|/)(tau_dd|tau_b|A|Ab)$",
+             ((_CLIENTS, None), (_CLIENTS, None, None))),
+        ),
+        skip_leading=1 if scan else 0,
+    )
+
+
+def client_state_shardings(mesh: Mesh, tree: Params, n_fl_clients: int) -> Params:
+    """Strategy carried state (replay buffers etc.): any leaf whose leading
+    axis is the client population shards it over the client axes — the
+    memory strategy's ``(n, d)`` buffer then lives as per-shard slices
+    next to the update stack instead of n_devices replicas.  Leaves of any
+    other shape (scalars, codec state) replicate."""
+    from repro.launch.mesh import client_axes
+
+    ca = client_axes(mesh)
+    nc = int(np.prod([_axis_size(mesh, a) for a in ca]))
+    caxis = ca if len(ca) > 1 else ca[0]
+
+    def f(leaf):
+        spec: list = [None] * len(leaf.shape)
+        if (len(leaf.shape) >= 1 and leaf.shape[0] == n_fl_clients
+                and nc > 1 and n_fl_clients % nc == 0):
+            spec[0] = caxis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(f, tree)
+
+
+def channel_state_sharding(mesh: Mesh, shape: Tuple[int, ...]) -> NamedSharding:
+    """In-scan channel sampler state (``ge_scan_sampler`` /
+    ``clustered_ge_scan_sampler``): the packed per-link gate vector shards
+    over the client axes when its length divides evenly — the clustered
+    layout's C·(m + m(m-1)/2) lanes always do once C covers the client
+    axes — else it replicates (the dense n + n(n-1)/2 packing rarely
+    divides, and at that size replication is cheap)."""
+    from repro.launch.mesh import client_axes
+
+    ca = client_axes(mesh)
+    nc = int(np.prod([_axis_size(mesh, a) for a in ca]))
+    caxis = ca if len(ca) > 1 else ca[0]
+    spec: list = [None] * len(shape)
+    if len(shape) >= 1 and nc > 1 and shape[0] % nc == 0:
+        spec[0] = caxis
+    return NamedSharding(mesh, P(*spec))

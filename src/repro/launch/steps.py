@@ -147,8 +147,9 @@ def build_step(
             grad_shardings=psh if fsdp else None,
         )
         # strategy carried state (replay buffers etc.): lower against its
-        # abstract shape; replicated for now (an (n, d) buffer would shard
-        # over the client axes once a stateful strategy reaches production)
+        # abstract shape; client-indexed leaves (the memory strategy's
+        # (n, d) buffer) shard over the client axes next to the update
+        # stack, everything else replicates
         d_flat = flatten.flat_spec(specs["params"]).d
         agg_state = jax.eval_shape(
             lambda: strategy.init_state(rc.n_clients, d_flat)
@@ -157,8 +158,16 @@ def build_step(
         bsh = shard_rules.train_batch_shardings(
             mesh, mode, specs["batches"], scan=bool(scan_rounds))
         rep = NamedSharding(mesh, P())
-        st_sh = jax.tree.map(lambda _: rep, agg_state)
-        in_sh = (psh, ssh, st_sh, bsh, rep, rep, rep)
+        st_sh = shard_rules.client_state_shardings(mesh, agg_state, rc.n_clients)
+        # connectivity realizations + relay weights shard along the client
+        # axes together with the update stack (scalax-style rule,
+        # launch/sharding.fl_round_rule): dense (n, n) operands shard rows,
+        # block (C, m, m) cluster tensors shard the cluster axis; the scan
+        # trace's leading K axis stays unsharded.  A carries no K axis.
+        tau_sh = shard_rules.fl_round_rule(scan=bool(scan_rounds)).shardings(
+            mesh, {"tau_up": specs["tau_up"], "tau_dd": specs["tau_dd"]})
+        A_sh = shard_rules.fl_round_rule().shardings(mesh, {"A": specs["A"]})["A"]
+        in_sh = (psh, ssh, st_sh, bsh, tau_sh["tau_up"], tau_sh["tau_dd"], A_sh)
         metrics_sh = {
             "loss": rep,
             "delta_norm": rep,

@@ -11,7 +11,10 @@ Connectivity is served by a :class:`~repro.channel.ChannelProcess`
 static i.i.d., bursty Gilbert–Elliott, mobility), and ``--chunk K``
 switches to the compiled multi-round scan engine: K rounds per device
 program, channel taus delivered as one bulk trace per chunk, metrics
-synced to the host once per chunk (DESIGN.md §9).
+synced to the host once per chunk (DESIGN.md §9).  ``--no-trace`` goes
+one further: connectivity is drawn *inside* the compiled scan through
+the channel's ``scan_sampler()``, so no tau tensors ever cross the host
+boundary — only the packed gate state and a PRNG key carry over.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
         --rounds 10 --smoke
@@ -57,6 +60,9 @@ def main():
                     help="connectivity dynamics preset (repro/configs/channels.py)")
     ap.add_argument("--chunk", type=int, default=1,
                     help="rounds per compiled scan chunk (1 = per-round loop)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="draw connectivity inside the compiled scan "
+                         "(channel.scan_sampler; no tau tensors on host)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--p-up", type=float, default=0.3)
     ap.add_argument("--p-c", type=float, default=0.8)
@@ -70,6 +76,8 @@ def main():
     if args.chunk < 1 or args.rounds % args.chunk != 0:
         ap.error(f"--chunk must be positive and divide --rounds "
                  f"(got chunk={args.chunk}, rounds={args.rounds})")
+    if args.no_trace and args.chunk == 1:
+        ap.error("--no-trace runs through the scan engine; pass --chunk K > 1")
     strategy = strategy_registry.get(
         args.aggregation,
         **({"fused": "kernel"} if args.fused_kernel
@@ -126,17 +134,36 @@ def main():
         return
 
     # chunked scan engine: K rounds per device program, one host sync per
-    # chunk; taus come from the channel's bulk trace service
+    # chunk; taus come from the channel's bulk trace service — or, with
+    # --no-trace, are drawn inside the compiled scan (channel gate state +
+    # PRNG key carried across chunks; no tau tensors ever on host)
     K = args.chunk
-    scan_fn = jax.jit(make_scan_round_fn(bundle.loss_fn, sgd(0.25), server_opt, rc))
+    if args.no_trace:
+        if not hasattr(channel, "scan_sampler"):
+            ap.error(f"--no-trace needs a channel with scan_sampler() "
+                     f"(--channel {args.channel} cannot sample in-scan)")
+        init_fn, sample_fn = channel.scan_sampler()
+        scan_fn = jax.jit(make_scan_round_fn(
+            bundle.loss_fn, sgd(0.25), server_opt, rc,
+            channel_sampler=sample_fn))
+        ch_rng, sub = jax.random.split(jax.random.PRNGKey(args.seed))
+        ch_state = init_fn(sub)
+    else:
+        scan_fn = jax.jit(make_scan_round_fn(bundle.loss_fn, sgd(0.25),
+                                             server_opt, rc))
     for c in range(args.rounds // K):
         r0 = c * K
-        tau_up, tau_dd = channel.trace(r0, K)
         batches = make_batches((K, n, T, B))
         t0 = time.perf_counter()
-        params, sstate, agg_state, metrics = scan_fn(
-            params, sstate, agg_state, batches,
-            jnp.asarray(tau_up, jnp.float32), jnp.asarray(tau_dd, jnp.float32), A)
+        if args.no_trace:
+            params, sstate, agg_state, ch_state, ch_rng, metrics = scan_fn(
+                params, sstate, agg_state, batches, ch_state, ch_rng, A)
+        else:
+            tau_up, tau_dd = channel.trace(r0, K)
+            params, sstate, agg_state, metrics = scan_fn(
+                params, sstate, agg_state, batches,
+                jnp.asarray(tau_up, jnp.float32),
+                jnp.asarray(tau_dd, jnp.float32), A)
         jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
         loss = np.asarray(metrics["loss"])

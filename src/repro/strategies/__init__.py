@@ -34,6 +34,7 @@ from repro.strategies.classic import (
     FedAvgNonBlind,
     FedAvgPerfect,
 )
+from repro.strategies.clustered import ClusteredColRelStrategy
 from repro.strategies.multihop import MultiHopStrategy, multihop_correction
 from repro.strategies.memory import MemoryStrategy
 from repro.strategies.quantized import QuantizedStrategy
@@ -48,6 +49,7 @@ __all__ = [
     "register_deprecated_alias",
     "resolve",
     "ColRelStrategy",
+    "ClusteredColRelStrategy",
     "FedAvgBlind",
     "FedAvgNonBlind",
     "FedAvgPerfect",

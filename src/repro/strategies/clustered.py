@@ -1,0 +1,114 @@
+"""Block-sparse clustered ColRel: the population-scale strategy.
+
+Same math as ``colrel`` restricted to a block-diagonal mixing matrix
+(``core/blocks.py``): clients relay only within their cluster, so the
+strategy consumes the relay weights and the D2D realizations in block
+form — ``A`` and ``tau_dd`` are ``(C, m, m)`` tensors, not ``(n, n)``.
+The round function never inspects those arguments' shapes (they are
+opaque traced slots of ``fl/round.make_round_fn``), so the block layout
+flows through the whole scan engine unchanged; only the strategy and the
+channel agree on it.
+
+Execution options mirror ``ColRelStrategy`` exactly:
+
+* ``fused=False``      — faithful two-stage path, per pytree leaf:
+  per-cluster relay mix, then the blind PS sum.
+* ``fused="collapse"`` (or ``True``) — exact scalar collapse onto the
+  blocked effective weights.
+* ``fused="kernel"``   — flatten-once blocked Pallas aggregation
+  (``kernels/relay_block.py``): the (n, d) stack crosses HBM once and
+  the dense mask never exists.  Under pjit it falls back to the plain
+  block contraction so GSPMD partitions the cluster axis (the block
+  tensors shard along their leading axis together with the stack).
+
+With C = 1 the cluster *is* the population and every path reproduces
+``colrel`` bitwise — the block einsums lower to the same XLA
+contractions as their dense twins (pinned in ``tests/test_clustered.py``
+through the scan engine).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks as block_ops
+from repro.core import flatten
+from repro.strategies import registry
+from repro.strategies.base import AggregationStrategy, ExecutionContext, State
+
+__all__ = ["ClusteredColRelStrategy"]
+
+_FUSED_MODES = (False, True, "collapse", "kernel")
+
+
+class ClusteredColRelStrategy(AggregationStrategy):
+    """ColRel over C independent clusters; A / tau_dd are (C, m, m)."""
+
+    name = "clustered"
+    needs_A = True
+    scalar_collapsible = True
+
+    def __init__(self, fused: "bool | str" = False):
+        if fused not in _FUSED_MODES:
+            raise ValueError(f"fused must be one of {_FUSED_MODES}, got {fused!r}")
+        self.fused = "collapse" if fused is True else fused
+
+    def weights(self, tau_up, tau_dd, A):
+        n = tau_up.shape[0]
+        w = block_ops.block_effective_weights(
+            A.astype(jnp.float32),
+            tau_up.astype(jnp.float32),
+            tau_dd.astype(jnp.float32),
+        )
+        return w / n
+
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State = ()):
+        delta = block_ops.block_colrel_round_delta(
+            updates, A, tau_up, tau_dd, fused=bool(self.fused)
+        )
+        return delta, state
+
+    def aggregate_tree(self, deltas, tau_up, tau_dd, A, state, ctx: ExecutionContext):
+        C, m, _ = A.shape
+        if self.fused == "kernel":
+            # flatten-once blocked path: ravel the update pytree into one
+            # (n, d) stack, stream it through the blocked aggregation
+            # exactly once (per-cluster mask + mix + blind sum, fp32
+            # accumulation), unravel the (d,) delta.
+            spec = flatten.flat_spec(deltas, stacked=True)
+            stack = flatten.ravel_stacked(deltas, dtype=ctx.flat_dtype)
+            if ctx.spmd_axes:
+                # Sharded execution: plain contraction so GSPMD partitions
+                # the cluster axis (per-shard partial sums + one (d,)
+                # all-reduce); an opaque pallas call would be replicated.
+                gflat = self.weights(tau_up, tau_dd, A) @ stack.astype(jnp.float32)
+            else:
+                from repro.kernels import ops as kernel_ops
+
+                gflat = kernel_ops.block_fused_aggregate(
+                    A, tau_up, tau_dd, stack, block_d=ctx.fused_block_d
+                )
+            return flatten.unravel(spec, gflat, dtype=jnp.float32), state
+        if self.fused:  # "collapse": leaf-wise scalar weighting
+            return super().aggregate_tree(deltas, tau_up, tau_dd, A, state, ctx)
+        # faithful two-stage path, leaf-wise: per-cluster relay mix then
+        # the blind PS sum — the blocked twin of ColRel's tensordot pair.
+        Mb = block_ops.block_mixing_matrix(
+            A.astype(jnp.float32), tau_dd.astype(jnp.float32)
+        )
+        t = tau_up.astype(jnp.float32).reshape(C, m)
+        gdelta = jax.tree.map(
+            lambda D: jnp.einsum(
+                "ci,ci...->...",
+                t,
+                jnp.einsum("cij,cj...->ci...",
+                           Mb, D.reshape(C, m, *D.shape[1:])),
+            )
+            / ctx.n_clients,
+            deltas,
+        )
+        return gdelta, state
+
+
+registry.register("clustered", ClusteredColRelStrategy)

@@ -1,0 +1,360 @@
+"""Block-sparse clustered relaying (DESIGN.md §10).
+
+Five layers:
+  1. golden equivalence — the ``clustered`` strategy with C = 1 (the
+     cluster *is* the population) replays the committed ``colrel``
+     golden trajectories bitwise through the scan engine, for every
+     execution mode x fused option: the block einsums lower to the same
+     XLA contractions as their dense twins;
+  2. the block substrate — ``clustered_blocks`` round-trips through its
+     dense form exactly, and per-cluster COPT-alpha
+     (``optimize_weights_clustered``) matches the dense Gauss-Seidel
+     block for block while preserving unbiasedness;
+  3. the blocked Pallas kernels against the ``core.blocks`` reference
+     contractions at tile-unaligned cluster sizes;
+  4. the clustered channels — loop/trace stream identity and the in-scan
+     samplers' layouts;
+  5. the client-axis sharding rules (``launch/sharding``) — axis
+     placement on a multi-axis mesh (spec level) and 1-device
+     degeneration — plus the trainer's ``no_trace`` mode.
+"""
+
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import strategies
+from repro.channel import (
+    ClusteredMarkovChannel,
+    ClusteredStaticChannel,
+    MarkovChannel,
+    StaticChannel,
+    clustered_ge_scan_sampler,
+    clustered_static_scan_sampler,
+    gilbert_elliott,
+    gilbert_elliott_clustered,
+)
+from repro.core import blocks, optimize_weights, topology
+from repro.core.connectivity import reciprocity_matrix, sample_round
+from repro.core.weights import (
+    is_unbiased,
+    is_unbiased_clustered,
+    optimize_weights_clustered,
+    unbiasedness_residual_clustered,
+)
+from repro.data.pipeline import ClientDataset
+from repro.fl import FLTrainer
+from repro.fl.round import RoundConfig, make_scan_round_fn
+from repro.kernels.relay_block import (
+    block_fused_aggregate_pallas,
+    block_relay_mix_pallas,
+)
+from repro.optim import sgd, sgd_momentum
+
+_GG_PATH = pathlib.Path(__file__).parent / "golden" / "generate_golden.py"
+_spec = importlib.util.spec_from_file_location("_golden_gen_clustered", _GG_PATH)
+gg = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(gg)
+
+GOLDEN = np.load(pathlib.Path(__file__).parent / "golden" / "round_golden.npz")
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _random_clustered(C=3, m=5, seed=0, rho=0.6):
+    """A clustered link model with *distinct* random blocks (stronger than
+    ``clustered_blocks``' identical ones)."""
+    rng = np.random.default_rng(seed)
+    Pb = rng.uniform(0.4, 0.95, size=(C, m, m))
+    for c in range(C):
+        np.fill_diagonal(Pb[c], 1.0)
+    Eb = np.stack([reciprocity_matrix(Pb[c], rho) for c in range(C)])
+    p = rng.uniform(0.3, 0.9, size=C * m)
+    return blocks.ClusteredLinkModel(p, Pb, Eb)
+
+
+def _golden_inputs(mode, rounds):
+    """The golden problem's tau/batch streams stacked for a K-round scan
+    (identical draws to gg.run_config's per-round loop)."""
+    T = 1 if mode == "weighted_grad" else 2
+    tau_rng = np.random.default_rng(77)
+    bat_rng = np.random.default_rng(99)
+    taus = [sample_round(gg.PROB[3], tau_rng) for _ in range(rounds)]
+    bs = [gg.batches_for(bat_rng, T) for _ in range(rounds)]
+    if mode == "weighted_grad":
+        bs = [{k: v[:, 0] for k, v in b.items()} for b in bs]
+    batches = {k: jnp.asarray(np.stack([b[k] for b in bs])) for k in bs[0]}
+    tau_up = jnp.asarray(np.stack([t[0] for t in taus]), jnp.float32)
+    tau_dd = jnp.asarray(np.stack([t[1] for t in taus]), jnp.float32)
+    return batches, tau_up, tau_dd
+
+
+def _run_clustered_scan(fused, mode, rounds=gg.ROUNDS):
+    """gg.run_config's experiment through the scan engine with the
+    ``clustered`` strategy at C = 1: the (n, n) operands reshape to
+    (1, n, n) blocks and flow through the round as opaque traced slots."""
+    H, centers, Wc, model, A = gg.PROB
+    n = gg.N
+    T = 1 if mode == "weighted_grad" else 2
+    rc = RoundConfig(n_clients=n, local_steps=T, mode=mode,
+                     aggregation=strategies.get("clustered", fused=fused))
+    server_opt = sgd_momentum(1.0, beta=0.9)
+    fn = jax.jit(make_scan_round_fn(gg.make_loss(H, Wc), sgd(0.05),
+                                    server_opt, rc))
+    params = {"x": jnp.zeros(gg.DX, jnp.float32),
+              "W": jnp.zeros((3, 4), jnp.float32)}
+    batches, tau_up, tau_dd = _golden_inputs(mode, rounds)
+    tau_b = tau_dd.reshape(rounds, 1, n, n)
+    Ab = jnp.asarray(A, jnp.float32).reshape(1, n, n)
+    params, _, _, metrics = fn(params, server_opt.init(params), (),
+                               batches, tau_up, tau_b, Ab)
+    return params, metrics
+
+
+# ---------------------------------------------------------------------------
+# 1. golden: clustered C=1 == colrel, bitwise, through the scan engine
+# ---------------------------------------------------------------------------
+
+_C1_CONFIGS = [(f, m, t)
+               for f, t in ((False, "colrel"), ("collapse", "colrel_fused"))
+               for m in gg.MODES]
+_C1_CONFIGS.append(("kernel", "per_client", "colrel|per_client|kernel"))
+
+
+@pytest.mark.parametrize("fused,mode,ref", [
+    (f, m, t if "|" in t else f"{t}|{m}") for f, m, t in _C1_CONFIGS
+], ids=[f"{m}-{f}" for f, m, _ in _C1_CONFIGS])
+def test_clustered_c1_matches_colrel_golden(fused, mode, ref):
+    """C = 1 block execution replays the committed dense colrel fixture
+    bit for bit — params and the realized weight-sum metric."""
+    params, metrics = _run_clustered_scan(fused, mode)
+    np.testing.assert_array_equal(np.asarray(params["x"], np.float32),
+                                  GOLDEN[f"{ref}|x"])
+    np.testing.assert_array_equal(np.asarray(params["W"], np.float32),
+                                  GOLDEN[f"{ref}|W"])
+    np.testing.assert_array_equal(
+        np.float32(np.asarray(metrics["weight_sum"])[-1]),
+        GOLDEN[f"{ref}|weight_sum"])
+
+
+# ---------------------------------------------------------------------------
+# 2. block substrate: dense round-trip + per-cluster COPT-alpha
+# ---------------------------------------------------------------------------
+
+
+def test_clustered_blocks_dense_roundtrip():
+    model = topology.clustered_blocks(24, 0.5, 6, p_intra=0.8, rho=0.7)
+    dense = model.to_dense()
+    # cross-cluster support is exactly zero (E inherits it from P)
+    mask = np.kron(np.eye(4), np.ones((6, 6)))
+    assert np.array_equal(dense.P * (1 - mask), np.zeros((24, 24)))
+    assert np.array_equal(dense.E * (1 - mask), np.zeros((24, 24)))
+    back = blocks.ClusteredLinkModel.from_dense(dense, 6)
+    np.testing.assert_array_equal(back.Pb, model.Pb)
+    np.testing.assert_array_equal(back.Eb, model.Eb)
+    # strict converter refuses cross-cluster mass
+    bad = dense.P.copy()
+    bad[0, 7] = 0.5
+    with pytest.raises(ValueError):
+        blocks.blocks_from_dense(bad, blocks.ClusterSpec(24, 6), strict=True)
+
+
+def test_block_copt_matches_dense_per_cluster():
+    """COPT-alpha decomposes exactly over clusters: cross-cluster
+    constraint coefficients and E-couplings vanish, so the block solver
+    reproduces the dense Gauss-Seidel block for block."""
+    model = _random_clustered(C=3, m=5, seed=2)
+    res_d = optimize_weights(model.to_dense(), sweeps=30, fine_tune_sweeps=10)
+    res_b = optimize_weights_clustered(model, sweeps=30, fine_tune_sweeps=10)
+    Ab_from_dense = blocks.blocks_from_dense(
+        res_d.A, blocks.ClusterSpec(15, 5), strict=False)
+    np.testing.assert_allclose(res_b.Ab, Ab_from_dense, atol=1e-9)
+    np.testing.assert_allclose(res_b.S, res_d.S, rtol=1e-9)
+    assert is_unbiased_clustered(model, res_b.Ab)
+    assert is_unbiased(model.to_dense(),
+                       blocks.block_diag_from_blocks(
+                           res_b.Ab, blocks.ClusterSpec(15, 5)))
+    assert np.max(np.abs(unbiasedness_residual_clustered(
+        model, res_b.Ab))) < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# 3. blocked kernels vs the core.blocks reference, tile-unaligned shapes
+# ---------------------------------------------------------------------------
+
+_KSHAPES = [(3, 5, 37, 16), (2, 8, 64, 64), (4, 3, 10, 4), (1, 6, 33, 8)]
+
+
+@pytest.mark.parametrize("C,m,d,bd", _KSHAPES,
+                         ids=[f"C{c}m{m}d{d}bd{b}" for c, m, d, b in _KSHAPES])
+def test_block_kernels_match_reference(C, m, d, bd):
+    rng = np.random.default_rng(C * 100 + m)
+    Ab = jnp.asarray(rng.uniform(0.1, 2.0, size=(C, m, m)), jnp.float32)
+    tau_b = jnp.asarray(rng.integers(0, 2, size=(C, m, m)), jnp.float32)
+    tau_up = jnp.asarray(rng.integers(0, 2, size=(C * m,)), jnp.float32)
+    upd = jnp.asarray(rng.normal(size=(C * m, d)), jnp.float32)
+
+    mix_k = block_relay_mix_pallas(Ab, tau_b, upd, block_d=bd, interpret=True)
+    mix_ref = blocks.block_relay_mix(upd, Ab, tau_b)
+    np.testing.assert_allclose(np.asarray(mix_k), np.asarray(mix_ref),
+                               atol=2e-6, rtol=1e-5)
+
+    agg_k = block_fused_aggregate_pallas(Ab, tau_up, tau_b, upd, block_d=bd,
+                                         interpret=True)
+    agg_ref = blocks.block_colrel_round_delta(upd, Ab, tau_up, tau_b,
+                                              fused=True)
+    np.testing.assert_allclose(np.asarray(agg_k), np.asarray(agg_ref),
+                               atol=2e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 4. clustered channels: stream identity + in-scan samplers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls,args", [
+    (ClusteredStaticChannel, {}),
+    (ClusteredMarkovChannel, {"memory": 0.8}),
+], ids=["static", "markov"])
+def test_clustered_channel_loop_equals_trace(cls, args):
+    model = topology.clustered_blocks(12, 0.5, 4, p_intra=0.8, rho=0.6)
+    if cls is ClusteredMarkovChannel:
+        mk = lambda: cls(gilbert_elliott_clustered(model, **args), seed=5)
+    else:
+        mk = lambda: cls(model, seed=5)
+    a, b = mk(), mk()
+    ups_t, dds_t = a.trace(0, 30)
+    assert ups_t.shape == (30, 12) and dds_t.shape == (30, 3, 4, 4)
+    for r in range(30):
+        tu, td = b.tau_for_round(r)
+        np.testing.assert_array_equal(np.asarray(tu), np.asarray(ups_t[r]))
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(dds_t[r]))
+
+
+def test_clustered_scan_samplers_shapes_and_marginals():
+    model = topology.clustered_blocks(12, 0.4, 4, p_intra=0.7, rho=1.0)
+    for sampler in (clustered_static_scan_sampler(model),
+                    clustered_ge_scan_sampler(
+                        gilbert_elliott_clustered(model, memory=0.8))):
+        init_fn, sample_fn = sampler
+        state = init_fn(jax.random.PRNGKey(0))
+
+        def body(carry, key):
+            tu, td, st = sample_fn(carry, key)
+            return st, (tu, td)
+
+        keys = jax.random.split(jax.random.PRNGKey(1), 600)
+        _, (ups, dds) = jax.lax.scan(body, state, keys)
+        assert ups.shape == (600, 12) and dds.shape == (600, 3, 4, 4)
+        # marginals of the in-scan draw match the model law
+        np.testing.assert_allclose(np.asarray(ups).mean(), 0.4, atol=0.05)
+        off = ~np.eye(4, dtype=bool)
+        np.testing.assert_allclose(
+            np.asarray(dds).mean(axis=0)[:, off].mean(), 0.7, atol=0.05)
+        # reciprocity rho=1: tau_ij == tau_ji within every cluster
+        np.testing.assert_array_equal(np.asarray(dds),
+                                      np.swapaxes(np.asarray(dds), -1, -2))
+
+
+# ---------------------------------------------------------------------------
+# 5. client-axis sharding rules + the trainer's no-trace mode
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    """Duck-typed mesh for spec-level rule checks (tier-1 runs 1-device)."""
+    axis_names = ("data", "model")
+    shape = {"data": 4, "model": 2}
+
+
+def test_fl_round_rule_axis_placement():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import fl_round_rule
+
+    mesh = _FakeMesh()
+    r, rs = fl_round_rule(), fl_round_rule(scan=True)
+    assert r.spec("tau_up", (16,), mesh) == P("data")
+    assert r.spec("tau_dd", (16, 16), mesh) == P("data", None)
+    assert r.spec("A", (8, 4, 4), mesh) == P("data", None, None)
+    # scan: the leading K axis stays unsharded
+    assert rs.spec("tau_up", (5, 16), mesh) == P(None, "data")
+    assert rs.spec("tau_dd", (5, 16, 16), mesh) == P(None, "data", None)
+    assert rs.spec("tau_dd", (5, 8, 4, 4), mesh) == P(None, "data", None, None)
+    # non-divisible cluster/client counts replicate instead of erroring
+    assert r.spec("A", (3, 4, 4), mesh) == P(None, None, None)
+    assert r.spec("tau_up", (6,), mesh) == P(None)
+
+
+def test_client_rules_degenerate_on_one_device():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import (
+        channel_state_sharding,
+        client_state_shardings,
+        fl_round_rule,
+    )
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    SDS = jax.ShapeDtypeStruct
+    sh = fl_round_rule().shardings(
+        mesh, {"tau_dd": SDS((16, 16), np.float32)})["tau_dd"]
+    assert sh.spec == P(None, None)
+    st = client_state_shardings(mesh, {"buf": SDS((16, 8), np.float32)}, 16)
+    assert st["buf"].spec == P(None, None)
+    assert channel_state_sharding(mesh, (136,)).spec == P(None)
+
+
+def _tiny_trainer(channel, n=8, d=12, seed=3):
+    rng = np.random.default_rng(0)
+    targets = rng.normal(size=(n, d)).astype(np.float32)
+    clients = [ClientDataset({"t": np.repeat(targets[i][None], 64, 0)},
+                             batch_size=4, seed=i) for i in range(n)]
+    model = topology.fully_connected(n, 0.5, p_c=0.8, rho=1.0)
+    A = optimize_weights(model, sweeps=5, fine_tune_sweeps=5).A
+
+    def loss_fn(p, batch):
+        r = p["x"] - batch["t"]
+        return jnp.mean(r * r), None
+
+    return FLTrainer(loss_fn, {"x": jnp.zeros((d,), jnp.float32)}, model, A,
+                     clients, sgd(0.3), sgd_momentum(1.0, beta=0.9),
+                     local_steps=2, channel=channel, seed=seed)
+
+
+def test_trainer_no_trace_runs_all_rounds():
+    model = topology.fully_connected(8, 0.5, p_c=0.8, rho=1.0)
+    for channel in (StaticChannel(model, seed=3),
+                    MarkovChannel(gilbert_elliott(model, memory=0.8), seed=3)):
+        t = _tiny_trainer(channel)
+        log = t.run(10, chunk=4, no_trace=True)  # 2 full chunks + tail of 2
+        assert log.rounds == list(range(10))
+        assert np.all(np.isfinite(log.loss))
+        assert np.all(np.isfinite(log.weight_sums))
+
+
+def test_trainer_no_trace_rejects_unsupported():
+    from repro.channel import AdaptiveConfig, AdaptiveWeightSchedule
+
+    class NoSampler:
+        n = 8
+        def tau_for_round(self, r):  # pragma: no cover
+            raise AssertionError("no_trace must not call tau_for_round")
+        def model_for_round(self, r):
+            return topology.fully_connected(8, 0.5, p_c=0.8, rho=1.0)
+
+    model = topology.fully_connected(8, 0.5, p_c=0.8, rho=1.0)
+    t = _tiny_trainer(StaticChannel(model, seed=3))
+    t.channel = NoSampler()
+    with pytest.raises(ValueError, match="scan_sampler"):
+        t.run(2, chunk=2, no_trace=True)
+
+    t2 = _tiny_trainer(StaticChannel(model, seed=3))
+    t2.adaptive = AdaptiveWeightSchedule(8, AdaptiveConfig(every=4))
+    with pytest.raises(ValueError, match="adaptive"):
+        t2.run(4, chunk=4, no_trace=True)
