@@ -1,7 +1,13 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON
-records written by repro.launch.dryrun.
+records written by repro.launch.dryrun — and, with ``--telemetry DIR``,
+an observability report from a training run's telemetry stream
+(DESIGN.md §11): a per-client participation histogram built from the
+``summary.clients`` event and a rounds/sec table from the ``timing``
+events of ``events.jsonl``.
 
     PYTHONPATH=src python -m benchmarks.make_report [--tag TAG] > tables.md
+    PYTHONPATH=src python -m benchmarks.make_report \
+        --telemetry /tmp/colrel_metrics > telemetry.md
 """
 
 from __future__ import annotations
@@ -73,10 +79,109 @@ def dryrun_table(recs) -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# telemetry stream report (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def load_events(metrics_dir) -> list:
+    """Parse a run's ``events.jsonl`` (one JSON object per line)."""
+    out = []
+    for line in (Path(metrics_dir) / "events.jsonl").read_text().splitlines():
+        line = line.strip()
+        if line:
+            out.append(json.loads(line))
+    return out
+
+
+def participation_histogram(events, width: int = 40) -> str:
+    """Per-client participation-rate bars from the end-of-run
+    ``summary.clients`` event (the paper's whole subject: who got
+    through, and how unevenly)."""
+    summaries = [e for e in events if e["event"] == "summary.clients"]
+    if not summaries:
+        return "_no summary.clients event (telemetry off or run not closed)_"
+    s = summaries[-1]
+    rates = s["participation_rate"]
+    streaks = s.get("outage_streak_max") or [0] * len(rates)
+    lines = [
+        f"### Per-client participation ({s['rounds']} rounds, "
+        f"{len(rates)} clients)",
+        "",
+        "| client | rate | max outage streak | |",
+        "|---:|---:|---:|---|",
+    ]
+    for i, (rate, streak) in enumerate(zip(rates, streaks)):
+        bar = "#" * max(1, round(rate * width)) if rate > 0 else ""
+        lines.append(f"| {i} | {rate:.3f} | {streak} | `{bar}` |")
+    mean = sum(rates) / len(rates)
+    lines.append("")
+    lines.append(f"mean rate {mean:.3f}, min {min(rates):.3f} "
+                 f"(client {rates.index(min(rates))}), "
+                 f"max {max(rates):.3f} "
+                 f"(client {rates.index(max(rates))})")
+    return "\n".join(lines)
+
+
+def throughput_table(events) -> str:
+    """Rounds/sec per execution block from the ``timing`` events."""
+    timing = [e for e in events if e["event"] == "timing"]
+    if not timing:
+        return "_no timing events_"
+    lines = [
+        "### Throughput",
+        "",
+        "| rounds | wall (s) | rounds/sec |",
+        "|---|---:|---:|",
+    ]
+    for e in timing:
+        r0, k = e["round0"], e["rounds"]
+        lines.append(f"| {r0}-{r0 + k - 1} | {e['seconds']:.3f} "
+                     f"| {e['rounds_per_sec']:.1f} |")
+    total_r = sum(e["rounds"] for e in timing)
+    total_s = sum(e["seconds"] for e in timing)
+    lines.append(f"| **total: {total_r}** | **{total_s:.3f}** "
+                 f"| **{total_r / total_s:.1f}** |" if total_s > 0 else "")
+    return "\n".join(lines)
+
+
+def telemetry_report(metrics_dir) -> str:
+    events = load_events(metrics_dir)
+    parts = [f"## Telemetry report ({metrics_dir})", ""]
+    manifest = Path(metrics_dir) / "manifest.json"
+    if manifest.exists():
+        m = json.loads(manifest.read_text())
+        parts.append(f"run: strategy `{m.get('strategy')}`, channel "
+                     f"`{m.get('channel')}`, backend `{m.get('backend')}`, "
+                     f"config digest `{str(m.get('config_digest'))[:12]}`")
+        parts.append("")
+    parts.append(participation_histogram(events))
+    parts.append("")
+    parts.append(throughput_table(events))
+    health = [e for e in events
+              if str(e.get("event", "")).startswith("health.")]
+    if health:
+        parts.append("")
+        parts.append(f"### Health events ({len(health)})")
+        parts.append("")
+        for e in health[:20]:
+            parts.append(f"- round {e.get('round')}: `{e['event']}` "
+                         + json.dumps({k: v for k, v in e.items()
+                                       if k not in ("event", "seq", "round")}))
+    return "\n".join(parts)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tag", default="")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="render an observability report from a run's "
+                         "telemetry dir (events.jsonl [+ manifest.json]) "
+                         "instead of the dry-run tables")
     args = ap.parse_args()
+    if args.telemetry:
+        print(telemetry_report(args.telemetry))
+        return
     recs = load(args.tag)
     single = [r for r in recs if r["mesh"] == "16x16"]
     multi = [r for r in recs if r["mesh"] == "2x16x16"]

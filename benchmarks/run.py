@@ -28,6 +28,7 @@ def all_benches():
         scan_bench,
         shard_bench,
         strategy_bench,
+        telemetry_bench,
         theory,
     )
 
@@ -47,6 +48,7 @@ def all_benches():
         "quant": quant_bench.bench_quant,
         "scan": scan_bench.bench_scan_engine,
         "shard_bench": shard_bench.bench_shard,
+        "telemetry": telemetry_bench.bench_telemetry,
     }
 
 

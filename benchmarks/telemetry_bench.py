@@ -1,0 +1,146 @@
+"""Telemetry overhead benchmark: the instrumented round vs the bare one.
+
+Trains the strongly-convex quadratic task at (n=256, R=256, K=64)
+through the chunked scan engine twice with identical seeds — once with
+telemetry off and once with the full observability stack attached (the
+instrumented round with its per-client vector metrics and outage-streak
+carry, a real ``JsonlSink`` + ``CsvSummarySink`` writing to disk, fenced
+throughput timing) — and measures rounds/sec for each.
+
+The design target (DESIGN.md §11) is that observability is cheap enough
+to leave on: the device tier adds O(n) lane-local work to an O(n·d)
+round, and the host tier writes ~120 bytes/round of buffered JSONL while
+vector histories accumulate as numpy.  The gate asserts the telemetry-on
+path keeps >= 95% of the bare throughput (``TELEMETRY_BENCH_MAX_OVERHEAD``
+overrides the 5% budget for throttled shared CI runners).  Timing takes
+the best of ``REPS`` interleaved repetitions per path, compile excluded,
+to damp scheduler noise.
+
+Correctness rides along: both runs must produce *bitwise-identical*
+loss / participation / weight-sum / uplink-bits trajectories and final
+params (the instrumentation wrapper only reads the base round's inputs
+and outputs), and the per-client vectors must reduce exactly to the
+scalar streams.
+
+Emits ``BENCH_telemetry.json`` with both throughputs and the measured
+overhead fraction.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel import MarkovChannel, gilbert_elliott
+from repro.core import fedavg_weights, topology
+from repro.data import quadratic_problem
+from repro.data.pipeline import ClientDataset
+from repro.fl import FLTrainer
+from repro.telemetry import CsvSummarySink, JsonlSink, MetricsLogger
+
+from .common import Row
+
+N, R, CHUNK = 256, 256, 64
+WARM = CHUNK  # rounds consumed before timing (compile + stream warmup)
+REPS = 3      # interleaved repetitions; best-of per path
+
+
+def _make_trainer(*, telemetry: bool = False, metrics=None,
+                  seed: int = 0) -> FLTrainer:
+    from repro.optim import sgd, sgd_momentum
+
+    prob = quadratic_problem(N, 16, mu=1.0, L=8.0, hetero=1.0, seed=0)
+    H = jnp.asarray(prob["H"], jnp.float32)
+
+    def loss_fn(params, batch):
+        x = params["x"]
+        d = x - batch["center"][0]
+        return 0.5 * d @ (H @ d) + 0.3 * batch["noise"][0] @ x, {}
+
+    clients = []
+    for i in range(N):
+        c = prob["centers"][i].astype(np.float32)
+        pool = np.random.default_rng(50 + i).normal(size=(256, 16)).astype(np.float32)
+        clients.append(ClientDataset({"center": np.tile(c, (256, 1)), "noise": pool},
+                                     batch_size=1, seed=seed + i))
+    model = topology.fully_connected(N, 0.6, p_c=0.7, rho=0.5)
+    channel = MarkovChannel(gilbert_elliott(model, memory=0.9), seed=seed,
+                            block=256)
+    # fedavg weights: COPT at n=256 is minutes of host work and the round
+    # body is identical either way — this bench measures telemetry, not alpha
+    return FLTrainer(loss_fn, {"x": jnp.zeros(16)}, model, fedavg_weights(N),
+                     clients, sgd(0.02), sgd_momentum(1.0, beta=0.0),
+                     local_steps=2, strategy="colrel", seed=seed,
+                     channel=channel, telemetry=telemetry, metrics=metrics)
+
+
+def _timed_run(telemetry: bool, out_dir: pathlib.Path) -> "tuple[float, FLTrainer]":
+    metrics = None
+    if telemetry:
+        metrics = MetricsLogger([JsonlSink(out_dir / "events.jsonl"),
+                                 CsvSummarySink(out_dir / "rounds.csv")])
+    t = _make_trainer(telemetry=telemetry, metrics=metrics)
+    t.run(WARM, chunk=CHUNK)
+    t0 = time.perf_counter()
+    t.run(R, chunk=CHUNK)
+    dt = time.perf_counter() - t0
+    if metrics is not None:
+        metrics.flush()
+    return dt, t
+
+
+def bench_telemetry() -> List[Row]:
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="telemetry_bench_"))
+    s_off, s_on = float("inf"), float("inf")
+    t_off = t_on = None
+    for rep in range(REPS):
+        dt, t_off = _timed_run(False, tmp)
+        s_off = min(s_off, dt)
+        dt, t_on = _timed_run(True, tmp / f"rep{rep}")
+        s_on = min(s_on, dt)
+
+    # the instrumented round is inert: bitwise-identical trajectories
+    for field in ("loss", "participation", "weight_sums", "uplink_bits"):
+        a, b = getattr(t_off.log, field), getattr(t_on.log, field)
+        assert a == b, f"telemetry changed the {field} trajectory"
+    assert np.array_equal(np.asarray(t_off.params["x"]),
+                          np.asarray(t_on.params["x"]))
+    # ...and the vectors reduce exactly to the scalar streams
+    part = t_on.metrics.vector("client_participation")
+    assert part.shape == (WARM + R, N)
+    np.testing.assert_array_equal(
+        part.sum(axis=1), np.float64(np.float32(t_off.log.participation)))
+
+    rps_off = R / s_off
+    rps_on = R / s_on
+    overhead = max(0.0, 1.0 - rps_on / rps_off)
+    budget = float(os.environ.get("TELEMETRY_BENCH_MAX_OVERHEAD", "0.05"))
+    assert overhead <= budget, (
+        f"telemetry overhead {overhead:.1%} > {budget:.0%} budget at "
+        f"(n={N}, R={R}, K={CHUNK}): {rps_off:.1f} -> {rps_on:.1f} rounds/s")
+
+    with open("BENCH_telemetry.json", "w") as f:
+        json.dump({
+            "n_clients": N,
+            "rounds": R,
+            "chunk": CHUNK,
+            "rounds_per_sec_off": round(rps_off, 1),
+            "rounds_per_sec_on": round(rps_on, 1),
+            "overhead_frac": round(overhead, 4),
+            "budget_frac": budget,
+            "bitwise_identical": True,
+        }, f, indent=1)
+
+    return [
+        (f"telemetry/off_n{N}_K{CHUNK}", s_off * 1e6 / R,
+         f"rounds_per_sec={rps_off:.1f}"),
+        (f"telemetry/on_n{N}_K{CHUNK}", s_on * 1e6 / R,
+         f"rounds_per_sec={rps_on:.1f};overhead={overhead:.1%}"),
+    ]

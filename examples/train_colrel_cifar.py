@@ -109,6 +109,16 @@ def main():
     ap.add_argument("--full-width", action="store_true",
                     help="paper-width ResNet-20 (slow on CPU)")
     ap.add_argument("--out", default="colrel_cifar")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="telemetry dir (events.jsonl, rounds.csv, "
+                         "manifest.json, vectors.npz); implies the "
+                         "instrumented round (DESIGN.md §11)")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="print cumulative rounds/sec every N rounds")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace into this dir")
+    ap.add_argument("--profile-rounds", type=int, default=4,
+                    help="profiler window length in rounds")
     args = ap.parse_args()
 
     strategy_options = build_options(args.strategy_opt)
@@ -135,6 +145,10 @@ def main():
         reopt_every=args.reopt_every,
         rounds=args.rounds,
         chunk=args.chunk,
+        metrics_dir=args.metrics_dir,
+        log_every=args.log_every,
+        profile_dir=args.profile_dir,
+        profile_rounds=args.profile_rounds,
     )
     exp = build_experiment(spec)
     if exp.copt_result is not None:
@@ -143,6 +157,7 @@ def main():
     elif args.adaptive:
         print(f"adaptive alpha: identity start, re-opt every {args.reopt_every}")
     exp.run(eval_every=max(args.rounds // 10, 1), verbose=True)
+    exp.close()  # per-client summary event + vectors.npz + sink flush
 
     log = exp.log.to_dict()
     log["config"] = {**vars(args), "strategy_opt": strategy_options}

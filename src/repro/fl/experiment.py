@@ -28,6 +28,7 @@ Model kinds:
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 from typing import Any, Callable, Dict, Mapping, Optional, Union
 
 import jax
@@ -55,6 +56,13 @@ from repro.data.pipeline import ClientDataset, make_federated_clients
 from repro.fl.trainer import FLTrainer, TrainLog
 from repro.models import build
 from repro.optim import sgd, sgd_momentum
+from repro.telemetry import (
+    CsvSummarySink,
+    JsonlSink,
+    MetricsLogger,
+    ProfileWindow,
+    RunManifest,
+)
 
 __all__ = ["TOPOLOGIES", "ExperimentSpec", "Experiment", "build_experiment"]
 
@@ -119,6 +127,21 @@ class ExperimentSpec:
         server_momentum: PS momentum (the paper's global momentum).
         batch_size: per-client batch size.
         seed: single seed for data, partitioning, channel and model init.
+
+    Observability (DESIGN.md §11):
+        telemetry: compile the instrumented round — per-client
+            participation / bits-on-air vectors and the device-resident
+            outage-streak carry (implied by ``metrics_dir``).
+        metrics_dir: directory receiving ``events.jsonl`` (structured
+            event stream), ``rounds.csv`` (per-round scalar table),
+            ``manifest.json`` (run provenance: config digest, strategy /
+            channel / codec, backend, git SHA) and — at
+            :meth:`Experiment.close` — ``vectors.npz`` with the stacked
+            ``(R, n)`` per-client metric histories.
+        profile_dir / profile_start / profile_rounds: opt-in
+            ``jax.profiler`` trace over rounds ``[profile_start,
+            profile_start + profile_rounds)``.
+        log_every: print a cumulative rounds/sec line every N rounds.
     """
 
     # -- task ----------------------------------------------------------
@@ -149,6 +172,13 @@ class ExperimentSpec:
     server_momentum: Optional[float] = None
     batch_size: Optional[int] = None
     seed: int = 0
+    # -- observability (DESIGN.md §11) ---------------------------------
+    telemetry: bool = False        # device-resident vector metrics
+    metrics_dir: Optional[str] = None   # events.jsonl/rounds.csv/manifest
+    profile_dir: Optional[str] = None   # jax.profiler trace target
+    profile_start: int = 0
+    profile_rounds: int = 4
+    log_every: int = 0             # stderr throughput cadence (0 = off)
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)
@@ -164,6 +194,7 @@ class Experiment:
     A: np.ndarray
     strategy: strategy_registry.AggregationStrategy
     copt_result: Optional[OptResult] = None  # set when alpha came from COPT
+    manifest: Optional[RunManifest] = None   # written when metrics_dir is set
 
     @property
     def log(self) -> TrainLog:
@@ -174,10 +205,23 @@ class Experiment:
         return self.trainer.params
 
     def run(self, rounds: Optional[int] = None, *, chunk: Optional[int] = None,
-            eval_every: int = 0, verbose: bool = False) -> TrainLog:
+            eval_every: int = 0, verbose: bool = False,
+            no_trace: bool = False) -> TrainLog:
         return self.trainer.run(rounds if rounds is not None else self.spec.rounds,
                                 chunk=chunk if chunk is not None else self.spec.chunk,
-                                eval_every=eval_every, verbose=verbose)
+                                eval_every=eval_every, verbose=verbose,
+                                no_trace=no_trace,
+                                log_every=self.spec.log_every)
+
+    def close(self) -> None:
+        """Finalize telemetry: per-client summary event, sink flush, and
+        (with a ``metrics_dir``) the stacked vector histories as
+        ``vectors.npz``.  Safe to call without telemetry; idempotent
+        enough for teardown paths."""
+        if self.spec.metrics_dir is not None:
+            self.trainer.metrics.save_vectors(
+                pathlib.Path(self.spec.metrics_dir) / "vectors.npz")
+        self.trainer.metrics.close()
 
 
 # ---------------------------------------------------------------------------
@@ -343,13 +387,42 @@ def build_experiment(spec: ExperimentSpec) -> Experiment:
     loss_fn, init_params, clients, client_opt, server_opt, local_steps, eval_fn = (
         _MODEL_BUILDERS[spec.model](spec, n)
     )
+    # observability wiring: a metrics_dir attaches the JSONL / CSV sinks
+    # and writes the provenance manifest up front (so even a crashed run
+    # is interpretable); it also implies the device tier.
+    telemetry = spec.telemetry or spec.metrics_dir is not None
+    metrics_logger = None
+    manifest = None
+    if spec.metrics_dir is not None:
+        mdir = pathlib.Path(spec.metrics_dir)
+        metrics_logger = MetricsLogger([
+            JsonlSink(mdir / "events.jsonl"),
+            CsvSummarySink(mdir / "rounds.csv"),
+        ])
+        codec = getattr(strategy, "codec", None)
+        manifest = RunManifest.collect(
+            dataclasses.asdict(spec),
+            strategy=strategy.name,
+            channel=spec.channel,
+            codec=getattr(codec, "name", None),
+            n_clients=n,
+            mode=spec.mode,
+            local_steps=local_steps,
+        )
+        manifest.write(mdir)
+    profile = None
+    if spec.profile_dir is not None:
+        profile = ProfileWindow(spec.profile_dir, start=spec.profile_start,
+                                rounds=spec.profile_rounds)
     trainer = FLTrainer(
         loss_fn, init_params, init_model, A, clients, client_opt, server_opt,
         local_steps=local_steps, strategy=strategy, mode=spec.mode,
         seed=spec.seed, eval_fn=eval_fn, channel=channel,
         adaptive=_adaptive_schedule(spec, n),
+        telemetry=telemetry, metrics=metrics_logger, profile=profile,
     )
     return Experiment(
         spec=spec, trainer=trainer, link_model=init_model,
         A=np.asarray(A), strategy=strategy, copt_result=copt_result,
+        manifest=manifest,
     )

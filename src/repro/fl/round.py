@@ -132,6 +132,7 @@ def make_round_fn(
     server_opt: Optimizer,
     rc: RoundConfig,
     grad_shardings: Optional[Params] = None,
+    telemetry: bool = False,
 ):
     """Returns round(params, server_state, agg_state, batches,
     tau_up, tau_dd, A) -> (params, server_state, agg_state, metrics).
@@ -140,6 +141,16 @@ def make_round_fn(
     per_client/client_sequential, or (T=1 collapsed) (n_clients, B, ...)
     for weighted_grad.  ``agg_state`` is the strategy's carried state
     (``strategy.init_state(n, d)``; ``()`` for stateless strategies).
+
+    ``telemetry=True`` wraps the body with the device-resident vector
+    metrics (DESIGN.md §11): the signature grows one trailing ``streak``
+    carry — ``round(params, server_state, agg_state, batches, tau_up,
+    tau_dd, A, streak) -> (params, server_state, agg_state, streak,
+    metrics)`` — and ``metrics`` additionally carries per-client
+    ``client_participation`` / ``client_uplink_bits`` / ``outage_streak``
+    ``(n,)`` vectors plus the ``weight_drift`` scalar.  The body itself
+    is untouched, so trajectories and scalar metrics stay bitwise
+    identical with telemetry on or off.
     """
     strategy = rc.resolve_strategy()
     ctx = rc.execution_context()
@@ -266,7 +277,13 @@ def make_round_fn(
         }
         return new_params, server_state, agg_state, metrics
 
-    return round_fn
+    if not telemetry:
+        return round_fn
+    from repro.telemetry.device import instrument_round_fn
+
+    # the wire rate is static per strategy (a function of the flat dim,
+    # which the wrapper reads off params at trace time)
+    return instrument_round_fn(round_fn, strategy.wire_bits_per_coord)
 
 
 def make_scan_round_fn(
@@ -276,6 +293,7 @@ def make_scan_round_fn(
     rc: RoundConfig,
     grad_shardings: Optional[Params] = None,
     channel_sampler: Optional[Callable] = None,
+    telemetry: bool = False,
 ):
     """The chunked multi-round engine: K rounds compiled into one program.
 
@@ -309,11 +327,39 @@ def make_scan_round_fn(
     per_client / client_sequential, ``(K, n, B, ...)`` for
     weighted_grad.  K is baked into the trace via the input shapes —
     one compile per distinct chunk size, reused across chunks.
+
+    ``telemetry=True`` (DESIGN.md §11) threads the ``(n,)`` int32
+    outage-streak age vector through the scan carry — next to the
+    channel gate state in the sampled variant — and stacks the vector
+    metrics ``(K, n)``: both signatures grow one trailing ``streak``
+    input and a ``streak`` result before ``metrics``, and nothing
+    telemetry-related leaves the device mid-scan.
     """
     round_fn = make_round_fn(loss_fn, client_opt, server_opt, rc,
-                             grad_shardings=grad_shardings)
+                             grad_shardings=grad_shardings,
+                             telemetry=telemetry)
 
     if channel_sampler is None:
+        if telemetry:
+
+            def scan_traced_tel(params, server_state, agg_state, batches,
+                                tau_up, tau_dd, A, streak):
+                def body(carry, xs):
+                    p, ss, ag, st = carry
+                    b, tu, td = xs
+                    p, ss, ag, st, metrics = round_fn(p, ss, ag, b, tu, td,
+                                                      A, st)
+                    return (p, ss, ag, st), metrics
+
+                (params, server_state, agg_state, streak), metrics = (
+                    jax.lax.scan(
+                        body, (params, server_state, agg_state, streak),
+                        (batches, tau_up, tau_dd),
+                    )
+                )
+                return params, server_state, agg_state, streak, metrics
+
+            return scan_traced_tel
 
         def scan_traced(params, server_state, agg_state, batches,
                         tau_up, tau_dd, A):
@@ -332,6 +378,29 @@ def make_scan_round_fn(
         return scan_traced
 
     sample_fn = channel_sampler
+
+    if telemetry:
+
+        def scan_sampled_tel(params, server_state, agg_state, batches,
+                             channel_state, rng, A, streak):
+            def body(carry, b):
+                p, ss, ag, cs, key, st = carry
+                key, sub = jax.random.split(key)
+                tu, td, cs = sample_fn(cs, sub)
+                p, ss, ag, st, metrics = round_fn(p, ss, ag, b, tu, td, A, st)
+                return (p, ss, ag, cs, key, st), metrics
+
+            (params, server_state, agg_state, channel_state, rng, streak), \
+                metrics = jax.lax.scan(
+                    body,
+                    (params, server_state, agg_state, channel_state, rng,
+                     streak),
+                    batches,
+                )
+            return (params, server_state, agg_state, channel_state, rng,
+                    streak, metrics)
+
+        return scan_sampled_tel
 
     def scan_sampled(params, server_state, agg_state, batches,
                      channel_state, rng, A):

@@ -33,6 +33,16 @@ the loop's round function.  Adaptive re-optimization and eval stay
 correct by construction — the chunk size must divide their cadences (and
 re-opts then land exactly on chunk boundaries); otherwise the trainer
 falls back to the per-round loop.
+
+**Telemetry** (DESIGN.md §11): every metric stream — both execution
+paths — routes through one :class:`~repro.telemetry.MetricsLogger`
+append path; :class:`TrainLog` remains attached as the bitwise-compatible
+facade (``trainer.log is trainer.metrics.log``).  ``telemetry=True``
+additionally compiles the instrumented round (per-client participation /
+bits-on-air vectors, a device-resident outage-streak carry, unbiasedness
+drift), and ``profile=``/``run(log_every=)`` expose the opt-in profiler
+window and throughput readout.  All of it is off by default and the
+default path's TrainLog streams are unchanged to the bit.
 """
 
 from __future__ import annotations
@@ -52,6 +62,13 @@ from repro.core.flatten import flat_spec
 from repro.data.pipeline import ClientDataset, stack_chunk_batches
 from repro.fl.round import RoundConfig, make_round_fn, make_scan_round_fn
 from repro.optim import Optimizer
+from repro.telemetry import (
+    CompileTracker,
+    MetricsLogger,
+    ProfileWindow,
+    ThroughputMeter,
+    init_streak,
+)
 
 Params = Any
 
@@ -105,6 +122,9 @@ class FLTrainer:
         eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None,
         channel: Optional[ChannelProcess] = None,
         adaptive: Optional[AdaptiveWeightSchedule] = None,
+        telemetry: bool = False,
+        metrics: Optional[MetricsLogger] = None,
+        profile: Optional[ProfileWindow] = None,
     ):
         if strategy is not None and aggregation is not None:
             raise ValueError("pass strategy= or aggregation=, not both")
@@ -149,14 +169,29 @@ class FLTrainer:
         self.server_opt = server_opt
         self.server_state = server_opt.init(init_params)
         self.agg_state = self.strategy.init_state(n, flat_spec(init_params).d)
-        self._round_fn = jax.jit(make_round_fn(loss_fn, client_opt, server_opt, rc))
+        # telemetry (DESIGN.md §11): `telemetry=True` switches the
+        # compiled round/scan to the instrumented signature (outage-streak
+        # carry + (n,)-vector metrics); `metrics` is the host-side logger
+        # every stream routes through (a bare facade-only one otherwise).
+        self.telemetry = bool(telemetry)
+        self.metrics = metrics if metrics is not None else MetricsLogger()
+        self.profile = profile
+        self.meter = ThroughputMeter()
+        self.compiles = CompileTracker()
+        self._warm_fns: set = set()
+        self._streak = init_streak(n) if self.telemetry else None
+        self._log_every = 0
+        self._last_tlog = 0
+        self._round_fn = jax.jit(make_round_fn(
+            loss_fn, client_opt, server_opt, rc, telemetry=self.telemetry))
+        self.compiles.register("round_fn", self._round_fn)
         self._scan_fn = None  # built on first chunked run
         self._seed = seed
         # no-trace mode: in-scan sampler fn + carried (channel_state, rng)
         self._sampled_scan_fn = None
         self._channel_state = None
         self._channel_rng = None
-        self.log = TrainLog()
+        self.log = self.metrics.log
 
     # ------------------------------------------------------------------
     def _stack_batches(self, rounds: int = 1) -> Dict[str, np.ndarray]:
@@ -183,10 +218,12 @@ class FLTrainer:
         self.A = jnp.asarray(A_new, jnp.float32)
         true_m = self.channel.model_for_round(r)
         info = self.adaptive.events[-1]
-        self.log.reopt_rounds.append(r)
-        self.log.est_p_err.append(self.adaptive.estimator.errors(true_m)["p"])
-        self.log.S_est.append(float(info["S_est"]))
-        self.log.S_true.append(float(variance_S(true_m, A_new)))
+        self.metrics.log_reopt(
+            r,
+            S_est=float(info["S_est"]),
+            S_true=float(variance_S(true_m, A_new)),
+            p_err=self.adaptive.estimator.errors(true_m)["p"],
+        )
         if verbose:
             print(
                 f"  round {r+1:4d}  re-opt alpha: "
@@ -199,8 +236,7 @@ class FLTrainer:
     def _maybe_eval(self, r: int, eval_every: int, verbose: bool) -> None:
         if eval_every and (r + 1) % eval_every == 0 and self.eval_fn is not None:
             em = self.eval_fn(self.params)
-            self.log.eval_rounds.append(r)
-            self.log.eval_metrics.append({k: float(v) for k, v in em.items()})
+            self.metrics.log_eval(r, em)
             if verbose:
                 print(f"  round {r+1:4d}  loss={self.log.loss[-1]:.4f}  " +
                       "  ".join(f"{k}={v:.4f}" for k, v in em.items()))
@@ -210,9 +246,12 @@ class FLTrainer:
     # ------------------------------------------------------------------
     def _run_one(self, r: int, eval_every: int, verbose: bool) -> None:
         """One communication round through the per-round compiled fn."""
+        if self.profile is not None:
+            self.profile.maybe_start(r)
+        self.meter.start()
         tau_up, tau_dd = self.channel.tau_for_round(r)
         batches = self._stack_batches()
-        self.params, self.server_state, self.agg_state, metrics = self._round_fn(
+        args = (
             self.params,
             self.server_state,
             self.agg_state,
@@ -221,15 +260,23 @@ class FLTrainer:
             jnp.asarray(tau_dd, jnp.float32),
             self.A,
         )
-        self.log.rounds.append(r)
-        self.log.loss.append(float(metrics["loss"]))
-        self.log.participation.append(float(metrics["participation"]))
-        self.log.uplink_bits.append(float(metrics["uplink_bits"]))
-        self.log.weight_sums.append(float(metrics["weight_sum"]))
+        if self.telemetry:
+            (self.params, self.server_state, self.agg_state, self._streak,
+             metrics) = self._round_fn(*args, self._streak)
+        else:
+            (self.params, self.server_state, self.agg_state,
+             metrics) = self._round_fn(*args)
+        dt = self.meter.stop(1, fence=metrics)
+        if self.profile is not None:
+            self.profile.maybe_stop(r + 1)
+        self.metrics.log_timing(r, 1, dt)
+        self._log_compile_growth(r)
+        self.metrics.log_rounds(r, metrics)
         if self.adaptive is not None:
             self._ingest_adaptive(r, np.asarray(tau_up), np.asarray(tau_dd),
                                   verbose)
         self._maybe_eval(r, eval_every, verbose)
+        self._maybe_log_throughput(r + 1)
 
     # ------------------------------------------------------------------
     def _effective_chunk(self, chunk: int, eval_every: int) -> int:
@@ -244,44 +291,71 @@ class FLTrainer:
             return 1
         return chunk
 
-    def _append_chunk_metrics(self, r0: int, k: int, metrics) -> None:
-        """Bulk-append the scan's stacked ``(K,)`` metrics (one device
-        sync for the whole chunk)."""
-        loss = np.asarray(metrics["loss"], np.float64)
-        part = np.asarray(metrics["participation"], np.float64)
-        bits = np.asarray(metrics["uplink_bits"], np.float64)
-        wsum = np.asarray(metrics["weight_sum"], np.float64)
-        self.log.rounds.extend(range(r0, r0 + k))
-        self.log.loss.extend(loss.tolist())
-        self.log.participation.extend(part.tolist())
-        self.log.uplink_bits.extend(bits.tolist())
-        self.log.weight_sums.extend(wsum.tolist())
+    def _log_compile_growth(self, r: int) -> None:
+        """Emit ``health.recompile`` for jit cache growth past each
+        function's expected first compile."""
+        grew = self.compiles.check()
+        fresh = {}
+        for name, growth in grew.items():
+            if name in self._warm_fns:
+                fresh[name] = growth
+            else:
+                self._warm_fns.add(name)
+        if fresh:
+            self.metrics.log_recompiles(fresh, r)
+
+    def _maybe_log_throughput(self, r_next: int) -> None:
+        if not self._log_every or r_next - self._last_tlog < self._log_every:
+            return
+        self._last_tlog = r_next
+        import sys
+        print(
+            f"[telemetry] round {r_next}: "
+            f"{self.meter.rounds_per_sec():.2f} rounds/s "
+            f"({self.meter.total_rounds} rounds in "
+            f"{self.meter.total_seconds:.2f}s)",
+            file=sys.stderr,
+        )
 
     def _run_chunks(self, r0: int, n_chunks: int, k: int,
                     eval_every: int, verbose: bool) -> None:
         """``n_chunks`` chunks of ``k`` rounds through the scan engine."""
         if self._scan_fn is None:
             self._scan_fn = jax.jit(make_scan_round_fn(
-                self._loss_fn, self._client_opt, self.server_opt, self.rc))
+                self._loss_fn, self._client_opt, self.server_opt, self.rc,
+                telemetry=self.telemetry))
+            self.compiles.register("scan_fn", self._scan_fn)
         batches = self._stack_batches(k)
         for c in range(n_chunks):
             r = r0 + c * k
+            if self.profile is not None:
+                self.profile.maybe_start(r)
+            self.meter.start()
             tau_up, tau_dd = self.channel.trace(r, k)
-            self.params, self.server_state, self.agg_state, metrics = (
-                self._scan_fn(
-                    self.params,
-                    self.server_state,
-                    self.agg_state,
-                    jax.tree.map(jnp.asarray, batches),
-                    jnp.asarray(tau_up, jnp.float32),
-                    jnp.asarray(tau_dd, jnp.float32),
-                    self.A,
-                )
+            args = (
+                self.params,
+                self.server_state,
+                self.agg_state,
+                jax.tree.map(jnp.asarray, batches),
+                jnp.asarray(tau_up, jnp.float32),
+                jnp.asarray(tau_dd, jnp.float32),
+                self.A,
             )
+            if self.telemetry:
+                (self.params, self.server_state, self.agg_state,
+                 self._streak, metrics) = self._scan_fn(*args, self._streak)
+            else:
+                (self.params, self.server_state, self.agg_state,
+                 metrics) = self._scan_fn(*args)
             # host prefetch: the dispatch above is async, so stacking the
             # next chunk's batches overlaps this chunk's device execution
             batches = self._stack_batches(k) if c + 1 < n_chunks else None
-            self._append_chunk_metrics(r, k, metrics)
+            dt = self.meter.stop(k, fence=metrics)
+            if self.profile is not None:
+                self.profile.maybe_stop(r + k)
+            self.metrics.log_timing(r, k, dt)
+            self._log_compile_growth(r + k - 1)
+            self.metrics.log_rounds(r, metrics, k)
             if self.adaptive is not None:
                 ups, dds = np.asarray(tau_up), np.asarray(tau_dd)
                 for i in range(k):
@@ -294,6 +368,7 @@ class FLTrainer:
                             "must be a multiple of chunk"
                         )
             self._maybe_eval(r + k - 1, eval_every, verbose)
+            self._maybe_log_throughput(r + k)
 
     def _run_chunks_sampled(self, r0: int, k: int,
                             eval_every: int, verbose: bool) -> None:
@@ -305,14 +380,17 @@ class FLTrainer:
             init_fn, sample_fn = self.channel.scan_sampler()
             self._sampled_scan_fn = jax.jit(make_scan_round_fn(
                 self._loss_fn, self._client_opt, self.server_opt, self.rc,
-                channel_sampler=sample_fn))
+                channel_sampler=sample_fn, telemetry=self.telemetry))
+            self.compiles.register("sampled_scan_fn", self._sampled_scan_fn)
             key = jax.random.PRNGKey(self._seed)
             key, sub = jax.random.split(key)
             self._channel_state = init_fn(sub)
             self._channel_rng = key
+        if self.profile is not None:
+            self.profile.maybe_start(r0)
+        self.meter.start()
         batches = self._stack_batches(k)
-        (self.params, self.server_state, self.agg_state,
-         self._channel_state, self._channel_rng, metrics) = self._sampled_scan_fn(
+        args = (
             self.params,
             self.server_state,
             self.agg_state,
@@ -321,12 +399,27 @@ class FLTrainer:
             self._channel_rng,
             self.A,
         )
-        self._append_chunk_metrics(r0, k, metrics)
+        if self.telemetry:
+            (self.params, self.server_state, self.agg_state,
+             self._channel_state, self._channel_rng, self._streak,
+             metrics) = self._sampled_scan_fn(*args, self._streak)
+        else:
+            (self.params, self.server_state, self.agg_state,
+             self._channel_state, self._channel_rng,
+             metrics) = self._sampled_scan_fn(*args)
+        dt = self.meter.stop(k, fence=metrics)
+        if self.profile is not None:
+            self.profile.maybe_stop(r0 + k)
+        self.metrics.log_timing(r0, k, dt)
+        self._log_compile_growth(r0 + k - 1)
+        self.metrics.log_rounds(r0, metrics, k)
         self._maybe_eval(r0 + k - 1, eval_every, verbose)
+        self._maybe_log_throughput(r0 + k)
 
     # ------------------------------------------------------------------
     def run(self, rounds: int, *, chunk: int = 1, eval_every: int = 0,
-            verbose: bool = False, no_trace: bool = False) -> TrainLog:
+            verbose: bool = False, no_trace: bool = False,
+            log_every: int = 0) -> TrainLog:
         """Train for ``rounds`` communication rounds.
 
         ``chunk=K`` compiles K rounds into one device program and syncs
@@ -348,10 +441,16 @@ class FLTrainer:
         bitwise equal to the traced path.  Requires a channel exposing
         ``scan_sampler`` and no adaptive schedule (re-optimization needs
         the realized taus on host).
+
+        ``log_every=N`` prints a cumulative rounds/sec line to stderr
+        every N rounds (throughput is measured either way — see
+        ``self.meter``).
         """
         start = self.log.rounds[-1] + 1 if self.log.rounds else 0
         end = start + rounds
         k = self._effective_chunk(int(chunk), eval_every)
+        self._log_every = int(log_every)
+        self._last_tlog = start
         if no_trace:
             if not hasattr(self.channel, "scan_sampler"):
                 raise ValueError(
@@ -371,7 +470,7 @@ class FLTrainer:
                 self._run_chunks_sampled(r, min(k, end - r), eval_every,
                                          verbose)
                 r += min(k, end - r)
-            return self.log
+            return self._finish_run()
         r = start
         while r < end:
             if k > 1 and r % k == 0 and r + k <= end:
@@ -381,4 +480,13 @@ class FLTrainer:
             else:
                 self._run_one(r, eval_every, verbose)
                 r += 1
+        return self._finish_run()
+
+    def _finish_run(self) -> TrainLog:
+        """End-of-run bookkeeping: close a dangling profile window and
+        flush the sinks (the logger itself stays open — ``run`` may be
+        called again; owners call ``self.metrics.close()`` at teardown)."""
+        if self.profile is not None:
+            self.profile.close()
+        self.metrics.flush()
         return self.log

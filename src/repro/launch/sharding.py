@@ -326,6 +326,28 @@ def fl_round_rule(*, scan: bool = False) -> ShardingRule:
     )
 
 
+def telemetry_rule(*, scan: bool = False) -> ShardingRule:
+    """Telemetry operands of the instrumented FL round (DESIGN.md §11).
+
+    The ``(n,)`` outage-streak carry and the per-client metric vectors
+    (``client_participation`` / ``client_uplink_bits`` /
+    ``outage_streak``) shard their client dim over the client axes —
+    they are lane-local reads of the already-sharded ``tau_up`` — while
+    the ``weight_drift`` scalar replicates (no matching rule -> P()).
+    ``scan=True`` skips the leading K-round axis of the stacked
+    ``(K, n)`` metric outputs; the streak *input* carries no K axis, so
+    lower it with the default rule.  On a 1-device mesh everything
+    degenerates to replication, same as :func:`fl_round_rule`.
+    """
+    return ShardingRule(
+        rules=(
+            (r"(^|/)(client_participation|client_uplink_bits"
+             r"|outage_streak|streak)$", ((_CLIENTS,),)),
+        ),
+        skip_leading=1 if scan else 0,
+    )
+
+
 def client_state_shardings(mesh: Mesh, tree: Params, n_fl_clients: int) -> Params:
     """Strategy carried state (replay buffers etc.): any leaf whose leading
     axis is the client population shards it over the client axes — the

@@ -18,6 +18,11 @@ engine (DESIGN.md §9): the same round body scanned over a leading K axis
 ``tau_dd (K, C, C)``, metrics stacked ``(K,)`` — so the production pjit
 path compiles K communication rounds into one program exactly like
 ``FLTrainer.run(chunk=K)`` does on CPU.
+
+``telemetry=True`` lowers the instrumented round instead (DESIGN.md
+§11): one extra ``(C,)`` int32 outage-streak operand/result, per-client
+metric vectors sharded along the client axes like ``tau_up`` (stacked
+``(K, C)`` under ``scan_rounds``).
 """
 
 from __future__ import annotations
@@ -61,6 +66,7 @@ def build_step(
     fl_mode: str | None = None,
     cfg_override=None,
     scan_rounds: int | None = None,
+    telemetry: bool = False,
 ) -> Tuple[Any, Dict[str, Any], Any, Any]:
     mode = fl_mode or (cfg_override or get_arch_cfg(arch_id)).fl_mode
     specs = input_specs(arch_id, shape_name, mesh, cfg=cfg_override, fl_mode=mode)
@@ -145,6 +151,7 @@ def build_step(
             sgd_momentum(1.0, beta=SERVER_MOMENTUM),
             rc,
             grad_shardings=psh if fsdp else None,
+            telemetry=telemetry,
         )
         # strategy carried state (replay buffers etc.): lower against its
         # abstract shape; client-indexed leaves (the memory strategy's
@@ -185,6 +192,34 @@ def build_step(
             specs["tau_dd"],
             specs["A"],
         )
+        if telemetry:
+            # instrumented round (DESIGN.md §11): an (n,) int32 outage-
+            # streak carry rides as one extra operand/result, and the
+            # metrics dict grows the per-client vector streams — the
+            # vectors shard their client dim exactly like tau_up (they
+            # are lane-local reads of it), stacked (K, n) under scan.
+            import jax.numpy as jnp
+
+            SDS = jax.ShapeDtypeStruct
+            C = rc.n_clients
+            specs["streak"] = SDS((C,), jnp.int32)
+            streak_sh = shard_rules.telemetry_rule().shardings(
+                mesh, {"streak": specs["streak"]})["streak"]
+            lead = (int(scan_rounds),) if scan_rounds else ()
+            vec = {
+                "client_participation": SDS((*lead, C), jnp.float32),
+                "client_uplink_bits": SDS((*lead, C), jnp.float32),
+                "outage_streak": SDS((*lead, C), jnp.int32),
+            }
+            metrics_sh = dict(
+                metrics_sh,
+                weight_drift=rep,
+                **shard_rules.telemetry_rule(
+                    scan=bool(scan_rounds)).shardings(mesh, vec),
+            )
+            in_sh = (*in_sh, streak_sh)
+            out_sh = (psh, ssh, st_sh, streak_sh, metrics_sh)
+            lower_args = (*lower_args, specs["streak"])
         return round_fn, lower_args, in_sh, out_sh
 
     if specs["kind"] == "prefill":

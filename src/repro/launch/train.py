@@ -16,15 +16,27 @@ one further: connectivity is drawn *inside* the compiled scan through
 the channel's ``scan_sampler()``, so no tau tensors ever cross the host
 boundary — only the packed gate state and a PRNG key carry over.
 
+Observability (DESIGN.md §11): ``--metrics-dir DIR`` turns on the full
+telemetry stack — the instrumented round (per-client participation /
+bits-on-air vectors, device-resident outage-streak carry), a structured
+``events.jsonl`` + ``rounds.csv`` + ``manifest.json`` in DIR, and
+``vectors.npz`` with the stacked per-client histories at exit.
+``--profile-dir`` captures a ``jax.profiler`` trace over
+``--profile-rounds`` rounds; ``--log-every N`` prints cumulative
+rounds/sec to stderr every N rounds.
+
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
         --rounds 10 --smoke
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
-        --rounds 64 --chunk 16 --channel markov --smoke
+        --rounds 64 --chunk 16 --channel markov --smoke \
+        --metrics-dir /tmp/colrel_metrics
 """
 
 from __future__ import annotations
 
 import argparse
+import pathlib
+import sys
 import time
 
 import jax
@@ -39,6 +51,15 @@ from repro.core.flatten import flat_spec
 from repro.fl.round import RoundConfig, make_round_fn, make_scan_round_fn
 from repro.models import build, count_params
 from repro.optim import sgd, sgd_momentum
+from repro.telemetry import (
+    CsvSummarySink,
+    JsonlSink,
+    MetricsLogger,
+    ProfileWindow,
+    RunManifest,
+    ThroughputMeter,
+    init_streak,
+)
 
 
 def main():
@@ -66,6 +87,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--p-up", type=float, default=0.3)
     ap.add_argument("--p-c", type=float, default=0.8)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="telemetry output dir (events.jsonl, rounds.csv, "
+                         "manifest.json, vectors.npz); also enables the "
+                         "instrumented round")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="print cumulative rounds/sec every N rounds")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace into this dir")
+    ap.add_argument("--profile-rounds", type=int, default=4,
+                    help="profiler window length in rounds (with --profile-dir)")
     args = ap.parse_args()
 
     # the fused kernel only exists on the colrel path; refuse the
@@ -104,6 +135,49 @@ def main():
     sstate = server_opt.init(params)
     agg_state = strategy.init_state(n, flat_spec(params).d)
 
+    # observability wiring (DESIGN.md §11)
+    telemetry = args.metrics_dir is not None
+    logger = None
+    if telemetry:
+        mdir = pathlib.Path(args.metrics_dir)
+        logger = MetricsLogger([JsonlSink(mdir / "events.jsonl"),
+                                CsvSummarySink(mdir / "rounds.csv")])
+        RunManifest.collect(
+            vars(args), strategy=strategy.name, channel=args.channel,
+            codec=getattr(getattr(strategy, "codec", None), "name", None),
+            arch=cfg.name, n_clients=n,
+        ).write(mdir)
+        print(f"telemetry -> {mdir}")
+    profile = (ProfileWindow(args.profile_dir, rounds=args.profile_rounds)
+               if args.profile_dir else None)
+    meter = ThroughputMeter()
+    streak = init_streak(n) if telemetry else None
+    last_tlog = 0
+
+    def tick(r0: int, k: int, metrics) -> None:
+        """Per-block telemetry: fence + clock, log, throughput line."""
+        nonlocal last_tlog
+        dt = meter.stop(k, fence=metrics)
+        if profile is not None:
+            profile.maybe_stop(r0 + k)
+        if logger is not None:
+            logger.log_timing(r0, k, dt)
+            logger.log_rounds(r0, metrics, k)
+        if args.log_every and r0 + k - last_tlog >= args.log_every:
+            last_tlog = r0 + k
+            print(f"[telemetry] round {r0 + k}: "
+                  f"{meter.rounds_per_sec():.2f} rounds/s", file=sys.stderr)
+
+    def finish() -> None:
+        if profile is not None:
+            profile.close()
+        if logger is not None:
+            logger.save_vectors(pathlib.Path(args.metrics_dir) / "vectors.npz")
+            logger.close()
+            print(f"telemetry: {meter.total_rounds} rounds in "
+                  f"{meter.total_seconds:.2f}s "
+                  f"({meter.rounds_per_sec():.2f} rounds/s)")
+
     rng = np.random.default_rng(args.seed)
     V, S, B, T = cfg.vocab_size, args.seq_len, args.batch, args.local_steps
 
@@ -118,19 +192,30 @@ def main():
         return batches
 
     if args.chunk == 1:
-        round_fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.25), server_opt, rc))
+        round_fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.25), server_opt,
+                                         rc, telemetry=telemetry))
         for r in range(args.rounds):
+            if profile is not None:
+                profile.maybe_start(r)
+            meter.start()
             tau_up, tau_dd = channel.tau_for_round(r)
             batches = make_batches((n, T, B))
             t0 = time.perf_counter()
-            params, sstate, agg_state, metrics = round_fn(
-                params, sstate, agg_state, batches,
-                jnp.asarray(tau_up, jnp.float32), jnp.asarray(tau_dd, jnp.float32), A)
+            fn_args = (params, sstate, agg_state, batches,
+                       jnp.asarray(tau_up, jnp.float32),
+                       jnp.asarray(tau_dd, jnp.float32), A)
+            if telemetry:
+                params, sstate, agg_state, streak, metrics = round_fn(
+                    *fn_args, streak)
+            else:
+                params, sstate, agg_state, metrics = round_fn(*fn_args)
             jax.block_until_ready(metrics["loss"])
+            tick(r, 1, metrics)
             print(f"round {r:3d}  loss={float(metrics['loss']):.4f}  "
                   f"participants={int(metrics['participation'])}/{n}  "
                   f"|delta|={float(metrics['delta_norm']):.3f}  "
                   f"({time.perf_counter() - t0:.2f}s)")
+        finish()
         return
 
     # chunked scan engine: K rounds per device program, one host sync per
@@ -145,27 +230,41 @@ def main():
         init_fn, sample_fn = channel.scan_sampler()
         scan_fn = jax.jit(make_scan_round_fn(
             bundle.loss_fn, sgd(0.25), server_opt, rc,
-            channel_sampler=sample_fn))
+            channel_sampler=sample_fn, telemetry=telemetry))
         ch_rng, sub = jax.random.split(jax.random.PRNGKey(args.seed))
         ch_state = init_fn(sub)
     else:
         scan_fn = jax.jit(make_scan_round_fn(bundle.loss_fn, sgd(0.25),
-                                             server_opt, rc))
+                                             server_opt, rc,
+                                             telemetry=telemetry))
     for c in range(args.rounds // K):
         r0 = c * K
+        if profile is not None:
+            profile.maybe_start(r0)
+        meter.start()
         batches = make_batches((K, n, T, B))
         t0 = time.perf_counter()
         if args.no_trace:
-            params, sstate, agg_state, ch_state, ch_rng, metrics = scan_fn(
-                params, sstate, agg_state, batches, ch_state, ch_rng, A)
+            if telemetry:
+                (params, sstate, agg_state, ch_state, ch_rng, streak,
+                 metrics) = scan_fn(params, sstate, agg_state, batches,
+                                    ch_state, ch_rng, A, streak)
+            else:
+                params, sstate, agg_state, ch_state, ch_rng, metrics = scan_fn(
+                    params, sstate, agg_state, batches, ch_state, ch_rng, A)
         else:
             tau_up, tau_dd = channel.trace(r0, K)
-            params, sstate, agg_state, metrics = scan_fn(
-                params, sstate, agg_state, batches,
-                jnp.asarray(tau_up, jnp.float32),
-                jnp.asarray(tau_dd, jnp.float32), A)
+            fn_args = (params, sstate, agg_state, batches,
+                       jnp.asarray(tau_up, jnp.float32),
+                       jnp.asarray(tau_dd, jnp.float32), A)
+            if telemetry:
+                params, sstate, agg_state, streak, metrics = scan_fn(
+                    *fn_args, streak)
+            else:
+                params, sstate, agg_state, metrics = scan_fn(*fn_args)
         jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
+        tick(r0, K, metrics)
         loss = np.asarray(metrics["loss"])
         part = np.asarray(metrics["participation"])
         bits = float(np.sum(np.asarray(metrics["uplink_bits"])))
@@ -174,6 +273,7 @@ def main():
               f"participants(mean)={part.mean():.1f}/{n}  "
               f"uplink={bits / 8e6:.1f} MB  "
               f"({dt:.2f}s, {K / dt:.1f} rounds/s)")
+    finish()
 
 
 if __name__ == "__main__":

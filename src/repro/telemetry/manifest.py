@@ -1,0 +1,118 @@
+"""Structured run manifests: what exactly did this run execute?
+
+A :class:`RunManifest` is written once at run start (``manifest.json``
+next to the metric streams) and records everything needed to interpret
+— or re-run — the metrics that follow: the full config with a stable
+digest, the strategy / channel / codec names, the mesh shape, the jax
+backend and device census, and the repo git SHA.  All host-side, all
+stdlib: the telemetry layer stays dependency-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import subprocess
+import time
+from typing import Any, Dict, Optional
+
+__all__ = ["RunManifest", "config_digest", "git_sha"]
+
+
+def _jsonable(obj: Any) -> Any:
+    """Best-effort canonical JSON form (numpy scalars/arrays, dataclasses,
+    mappings); unknown objects fall back to their repr."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return _jsonable(dataclasses.asdict(obj))
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    if hasattr(obj, "tolist"):  # numpy scalar or array
+        return _jsonable(obj.tolist())
+    if hasattr(obj, "item"):
+        return obj.item()
+    return repr(obj)
+
+
+def config_digest(config: Dict[str, Any]) -> str:
+    """sha256 over the canonical (sorted-key) JSON form of a config dict
+    — stable across dict ordering and process restarts, so two runs with
+    the same digest ran the same configuration."""
+    canon = json.dumps(_jsonable(config), sort_keys=True,
+                       separators=(",", ":"))
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+def git_sha(cwd: Optional[str] = None) -> Optional[str]:
+    """The repo HEAD SHA, or None outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=5,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+@dataclasses.dataclass
+class RunManifest:
+    """One run's provenance record (see module doc)."""
+
+    config: Dict[str, Any]
+    config_digest: str
+    strategy: Optional[str] = None
+    channel: Optional[str] = None
+    codec: Optional[str] = None
+    mesh_shape: Optional[Dict[str, int]] = None
+    backend: str = ""
+    device_count: int = 0
+    jax_version: str = ""
+    git_sha: Optional[str] = None
+    created_unix: float = 0.0
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def collect(cls, config: Dict[str, Any], *, strategy: Optional[str] = None,
+                channel: Optional[str] = None, codec: Optional[str] = None,
+                mesh_shape: Optional[Dict[str, int]] = None,
+                **extra: Any) -> "RunManifest":
+        """Gather the environment-derived fields (backend, devices, jax
+        version, git SHA) around the caller-supplied run identity."""
+        import jax
+
+        return cls(
+            config=_jsonable(config),
+            config_digest=config_digest(config),
+            strategy=strategy,
+            channel=channel,
+            codec=codec,
+            mesh_shape=dict(mesh_shape) if mesh_shape else None,
+            backend=jax.default_backend(),
+            device_count=jax.device_count(),
+            jax_version=jax.__version__,
+            git_sha=git_sha(cwd=str(pathlib.Path(__file__).parent)),
+            created_unix=time.time(),
+            extra=_jsonable(extra),
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def write(self, path) -> pathlib.Path:
+        """Write ``manifest.json`` (``path`` may be the file or a
+        directory to drop it into); returns the written path."""
+        p = pathlib.Path(path)
+        if p.is_dir() or p.suffix != ".json":
+            p.mkdir(parents=True, exist_ok=True)
+            p = p / "manifest.json"
+        else:
+            p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_dict(), indent=1, sort_keys=True))
+        return p
