@@ -1,0 +1,148 @@
+"""Checkpointing overhead benchmark: async saves vs a bare run.
+
+Trains the strongly-convex quadratic task at (n=256, R=256, K=64)
+through the chunked scan engine twice with identical seeds — once bare
+and once with the async checkpointer committing the complete run state
+every chunk (``ckpt_every=64``, four periodic saves plus the final
+commit, keep-last-3 retention, sha256-checksummed atomic writes to a
+real directory).
+
+The design target (DESIGN.md §12) is that fault tolerance is cheap
+enough to leave on: ``AsyncCheckpointer.save`` snapshots the state on
+the caller thread (device arrays by reference — jax buffers are
+immutable — host arrays by copy) and serializes/writes on a background
+thread, overlapping the next chunk's device execution.  The gate
+asserts the checkpointed path keeps >= 95% of the bare throughput
+(``CKPT_BENCH_MAX_OVERHEAD`` overrides the 5% budget for throttled
+shared CI runners).  Timing takes the best of ``REPS`` interleaved
+repetitions per path, compile excluded.
+
+Correctness rides along: both runs must produce *bitwise-identical*
+loss / participation / weight-sum / uplink-bits trajectories and final
+params (checkpointing only observes the run), the expected steps must
+be committed, and restoring the latest checkpoint into a fresh trainer
+must reproduce the final params exactly.
+
+Emits ``BENCH_ckpt.json`` with both throughputs and the measured
+overhead fraction.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel import MarkovChannel, gilbert_elliott
+from repro.ckpt import CheckpointWriter
+from repro.core import fedavg_weights, topology
+from repro.data import quadratic_problem
+from repro.data.pipeline import ClientDataset
+from repro.fl import FLTrainer
+
+from .common import Row
+
+N, R, CHUNK = 256, 256, 64
+WARM = CHUNK  # rounds consumed before timing (compile + stream warmup)
+REPS = 3      # interleaved repetitions; best-of per path
+
+
+def _make_trainer(*, seed: int = 0) -> FLTrainer:
+    from repro.optim import sgd, sgd_momentum
+
+    prob = quadratic_problem(N, 16, mu=1.0, L=8.0, hetero=1.0, seed=0)
+    H = jnp.asarray(prob["H"], jnp.float32)
+
+    def loss_fn(params, batch):
+        x = params["x"]
+        d = x - batch["center"][0]
+        return 0.5 * d @ (H @ d) + 0.3 * batch["noise"][0] @ x, {}
+
+    clients = []
+    for i in range(N):
+        c = prob["centers"][i].astype(np.float32)
+        pool = np.random.default_rng(50 + i).normal(size=(256, 16)).astype(np.float32)
+        clients.append(ClientDataset({"center": np.tile(c, (256, 1)), "noise": pool},
+                                     batch_size=1, seed=seed + i))
+    model = topology.fully_connected(N, 0.6, p_c=0.7, rho=0.5)
+    channel = MarkovChannel(gilbert_elliott(model, memory=0.9), seed=seed,
+                            block=256)
+    # fedavg weights: COPT at n=256 is minutes of host work and the round
+    # body is identical either way — this bench measures checkpointing
+    return FLTrainer(loss_fn, {"x": jnp.zeros(16)}, model, fedavg_weights(N),
+                     clients, sgd(0.02), sgd_momentum(1.0, beta=0.0),
+                     local_steps=2, strategy="colrel", seed=seed,
+                     channel=channel)
+
+
+def bench_ckpt() -> List[Row]:
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="ckpt_bench_"))
+    s_off, s_on = float("inf"), float("inf")
+    t_off = t_on = None
+    last_dir = None
+    for rep in range(REPS):
+        t = _make_trainer()
+        t.run(WARM, chunk=CHUNK)
+        t0 = time.perf_counter()
+        t.run(R, chunk=CHUNK)
+        s_off = min(s_off, time.perf_counter() - t0)
+        t_off = t
+
+        last_dir = tmp / f"rep{rep}"
+        t = _make_trainer()
+        t.run(WARM, chunk=CHUNK)
+        t0 = time.perf_counter()
+        t.run(R, chunk=CHUNK, ckpt_dir=last_dir, ckpt_every=CHUNK)
+        s_on = min(s_on, time.perf_counter() - t0)
+        t_on = t
+
+    # checkpointing only observes the run: bitwise-identical trajectories
+    for field in ("loss", "participation", "weight_sums", "uplink_bits"):
+        a, b = getattr(t_off.log, field), getattr(t_on.log, field)
+        assert a == b, f"checkpointing changed the {field} trajectory"
+    assert np.array_equal(np.asarray(t_off.params["x"]),
+                          np.asarray(t_on.params["x"]))
+    # the timed segment runs rounds 64..320; per-chunk saves land on
+    # 128/192/256/320 and keep-last-3 retains the newest three
+    assert CheckpointWriter(last_dir).steps() == [192, 256, 320]
+    # ...and the committed state restores to the exact final params
+    t_back = _make_trainer()
+    assert t_back.restore(last_dir) == WARM + R
+    assert np.array_equal(np.asarray(t_back.params["x"]),
+                          np.asarray(t_on.params["x"]))
+    shutil.rmtree(tmp, ignore_errors=True)
+
+    rps_off = R / s_off
+    rps_on = R / s_on
+    overhead = max(0.0, 1.0 - rps_on / rps_off)
+    budget = float(os.environ.get("CKPT_BENCH_MAX_OVERHEAD", "0.05"))
+    assert overhead <= budget, (
+        f"checkpoint overhead {overhead:.1%} > {budget:.0%} budget at "
+        f"(n={N}, R={R}, K={CHUNK}): {rps_off:.1f} -> {rps_on:.1f} rounds/s")
+
+    with open("BENCH_ckpt.json", "w") as f:
+        json.dump({
+            "n_clients": N,
+            "rounds": R,
+            "chunk": CHUNK,
+            "ckpt_every": CHUNK,
+            "rounds_per_sec_off": round(rps_off, 1),
+            "rounds_per_sec_on": round(rps_on, 1),
+            "overhead_frac": round(overhead, 4),
+            "budget_frac": budget,
+            "bitwise_identical": True,
+        }, f, indent=1)
+
+    return [
+        (f"ckpt/off_n{N}_K{CHUNK}", s_off * 1e6 / R,
+         f"rounds_per_sec={rps_off:.1f}"),
+        (f"ckpt/on_n{N}_K{CHUNK}", s_on * 1e6 / R,
+         f"rounds_per_sec={rps_on:.1f};overhead={overhead:.1%}"),
+    ]

@@ -21,6 +21,7 @@ import traceback
 def all_benches():
     from . import (
         channel_bench,
+        ckpt_bench,
         kernels_bench,
         paper_figures,
         quant_bench,
@@ -49,6 +50,7 @@ def all_benches():
         "scan": scan_bench.bench_scan_engine,
         "shard_bench": shard_bench.bench_shard,
         "telemetry": telemetry_bench.bench_telemetry,
+        "ckpt": ckpt_bench.bench_ckpt,
     }
 
 

@@ -107,6 +107,9 @@ class BlockBufferedChannel:
         self._dds = None
         self._ups_np = None  # lazy host view of the buffer (loop service)
         self._dds_np = None
+        # generator state as of the current buffer's generation — what a
+        # checkpoint stores so a restore regenerates this block bitwise
+        self._pre_block = None
 
     @property
     def n(self) -> int:
@@ -115,9 +118,27 @@ class BlockBufferedChannel:
     def _generate_block(self, rounds: int):
         raise NotImplementedError
 
+    def _gen_state(self):
+        """Subclass hook: the full generator/chain state whose capture
+        (immediately before ``_generate_block``) makes that block's
+        regeneration deterministic.  Must be a msgpack-codec-friendly
+        pytree (use :func:`repro.ckpt.keys.encode_prng_key` for typed
+        jax keys)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose generator state")
+
+    def _set_gen_state(self, state) -> None:
+        """Subclass hook: inverse of :meth:`_gen_state`."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose generator state")
+
     def _advance_block(self) -> None:
         if self._ups is not None:
             self._buf_start += self._ups.shape[0]
+        try:
+            self._pre_block = self._gen_state()
+        except NotImplementedError:
+            self._pre_block = None  # subclass opted out of checkpointing
         self._ups, self._dds = self._generate_block(self.block)
         self._ups_np = self._dds_np = None
 
@@ -138,6 +159,37 @@ class BlockBufferedChannel:
             self._dds_np = np.asarray(self._dds, np.float64)
         i = r - self._buf_start
         return self._ups_np[i], self._dds_np[i]
+
+    def checkpoint_state(self) -> dict:
+        """The stream position + generator state (DESIGN.md §12).
+
+        Rather than persisting the (large, device-resident) tau buffers,
+        the checkpoint stores the generator state captured *before* the
+        current block was generated plus the block's start round; a
+        restore reinstates that state and clears the buffers, so the
+        first post-restore service regenerates the identical block and
+        the stream continues bitwise where it left off."""
+        gen = self._gen_state() if self._ups is None else self._pre_block
+        if self._ups is not None and gen is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} does not expose generator state")
+        return {"kind": type(self).__name__, "block": self.block,
+                "buf_start": int(self._buf_start), "gen": gen}
+
+    def restore_state(self, state: dict) -> None:
+        """Inverse of :meth:`checkpoint_state` on a same-config channel."""
+        if state.get("kind") != type(self).__name__:
+            raise ValueError(
+                f"checkpoint is for channel {state.get('kind')!r}; this "
+                f"is a {type(self).__name__}")
+        if int(state["block"]) != self.block:
+            raise ValueError(
+                f"checkpointed block size {state['block']} != {self.block} "
+                "(the block size shapes the RNG stream)")
+        self._set_gen_state(state["gen"])
+        self._buf_start = int(state["buf_start"])
+        self._ups = self._dds = self._ups_np = self._dds_np = None
+        self._pre_block = None
 
     def trace(self, start: int, rounds: int):
         """Bulk service of rounds ``[start, start + rounds)``: ``(K, n)``
@@ -223,6 +275,14 @@ class StaticChannel(BlockBufferedChannel):
 
     def _generate_block(self, rounds: int):
         return sample_rounds(self.model, self._rng, rounds)
+
+    def _gen_state(self):
+        from repro.ckpt.schema import rng_state_to_json
+        return rng_state_to_json(self._rng)
+
+    def _set_gen_state(self, state) -> None:
+        from repro.ckpt.schema import rng_from_json
+        self._rng = rng_from_json(state)
 
     def model_for_round(self, r: int) -> LinkModel:
         return self.model

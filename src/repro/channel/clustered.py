@@ -145,6 +145,14 @@ class ClusteredStaticChannel(BlockBufferedChannel):
             rounds=rounds,
         )
 
+    def _gen_state(self):
+        from repro.ckpt.keys import encode_prng_key
+        return {"key": encode_prng_key(self._key)}
+
+    def _set_gen_state(self, state) -> None:
+        from repro.ckpt.keys import decode_prng_key
+        self._key = decode_prng_key(state["key"])
+
     def model_for_round(self, r: int) -> ClusteredLinkModel:
         return self.model
 
@@ -333,6 +341,16 @@ class ClusteredMarkovChannel(BlockBufferedChannel):
             self._arrs, self._state, k, rounds=rounds, n=self.n
         )
         return ups, dds
+
+    def _gen_state(self):
+        from repro.ckpt.keys import encode_prng_key
+        return {"key": encode_prng_key(self._key),
+                "state": np.asarray(self._state)}
+
+    def _set_gen_state(self, state) -> None:
+        from repro.ckpt.keys import decode_prng_key
+        self._key = decode_prng_key(state["key"])
+        self._state = jnp.asarray(state["state"])
 
     def model_for_round(self, r: int) -> ClusteredLinkModel:
         return self.params.model

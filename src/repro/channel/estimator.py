@@ -71,6 +71,24 @@ class LinkEstimator:
         self._s_joint = g * self._s_joint + tau_dd * tau_dd.T
         self.rounds += 1
 
+    # -- checkpoint/resume (DESIGN.md §12) ----------------------------
+    def checkpoint_state(self) -> dict:
+        """The full posterior: discounted counts + round tally."""
+        return {
+            "rounds": int(self.rounds),
+            "t": float(self._t),
+            "s_up": np.array(self._s_up),
+            "s_dd": np.array(self._s_dd),
+            "s_joint": np.array(self._s_joint),
+        }
+
+    def restore_state(self, state: dict) -> None:
+        self.rounds = int(state["rounds"])
+        self._t = float(state["t"])
+        self._s_up = np.asarray(state["s_up"], np.float64)
+        self._s_dd = np.asarray(state["s_dd"], np.float64)
+        self._s_joint = np.asarray(state["s_joint"], np.float64)
+
     # -- raw posterior means ------------------------------------------
     def _mean(self, s: np.ndarray) -> np.ndarray:
         a, b = self.prior

@@ -442,6 +442,17 @@ class MarkovChannel(BlockBufferedChannel):
         )
         return ups, dds
 
+    def _gen_state(self):
+        from repro.ckpt.keys import encode_prng_key
+        su, sp = self._state
+        return {"key": encode_prng_key(self._key),
+                "su": np.asarray(su), "sp": np.asarray(sp)}
+
+    def _set_gen_state(self, state) -> None:
+        from repro.ckpt.keys import decode_prng_key
+        self._key = decode_prng_key(state["key"])
+        self._state = (jnp.asarray(state["su"]), jnp.asarray(state["sp"]))
+
     def model_for_round(self, r: int) -> LinkModel:
         return self.params.model
 

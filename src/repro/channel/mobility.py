@@ -117,6 +117,43 @@ class MobilityChannel:
         # no block to vectorize — serve the bulk contract per-round
         return stacked_trace(self, start, rounds)
 
+    def checkpoint_state(self) -> dict:
+        """Full mobility state: RNG, geometry, and the already-derived
+        models of the current-and-later epochs (DESIGN.md §12).
+
+        The current epoch's model was derived from positions at the
+        epoch boundary — positions that no longer exist mid-epoch — so
+        it must ship in the checkpoint explicitly; stale earlier epochs
+        are dropped (they can never be served again)."""
+        from repro.ckpt.schema import rng_state_to_json
+        cur = self._next // self.epoch
+        return {
+            "kind": type(self).__name__,
+            "rng": rng_state_to_json(self._rng),
+            "positions": np.array(self.positions),
+            "waypoints": np.array(self._waypoints),
+            "next": int(self._next),
+            "models": {str(e): {"p": np.asarray(m.p), "P": np.asarray(m.P),
+                                "E": np.asarray(m.E)}
+                       for e, m in self._models.items() if e >= cur},
+        }
+
+    def restore_state(self, state: dict) -> None:
+        from repro.ckpt.schema import rng_from_json
+        if state.get("kind") != type(self).__name__:
+            raise ValueError(
+                f"checkpoint is for channel {state.get('kind')!r}; this "
+                f"is a {type(self).__name__}")
+        self._rng = rng_from_json(state["rng"])
+        self.positions = np.asarray(state["positions"], np.float64)
+        self._waypoints = np.asarray(state["waypoints"], np.float64)
+        self._next = int(state["next"])
+        self._models = {
+            int(e): LinkModel(np.asarray(m["p"]), np.asarray(m["P"]),
+                              np.asarray(m["E"]))
+            for e, m in state["models"].items()
+        }
+
     def model_for_round(self, r: int) -> LinkModel:
         e = r // self.epoch
         if e not in self._models:

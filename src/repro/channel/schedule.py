@@ -51,6 +51,26 @@ class AdaptiveWeightSchedule:
         )
         self.events: List[Dict[str, Any]] = []
 
+    def checkpoint_state(self) -> dict:
+        """Posterior counts + the re-opt event log (DESIGN.md §12).
+
+        Events are stored as one JSON string: their values may be numpy
+        scalars, which the msgpack pytree codec refuses but ``.item()``
+        maps to plain python for JSON."""
+        import json
+
+        return {
+            "estimator": self.estimator.checkpoint_state(),
+            "events": json.dumps(self.events,
+                                 default=lambda o: o.item()),
+        }
+
+    def restore_state(self, state: dict) -> None:
+        import json
+
+        self.estimator.restore_state(state["estimator"])
+        self.events = json.loads(state["events"])
+
     def step(
         self, r: int, tau_up: np.ndarray, tau_dd: np.ndarray
     ) -> Optional[np.ndarray]:

@@ -17,13 +17,28 @@ import numpy as np
 
 _BF16 = "bfloat16"
 
+# exact types only — np.float64 subclasses float but must take the array
+# branch so its dtype survives; type() membership also skips the (slow,
+# ABC-dispatched) jax.Array isinstance for every scalar leaf
+_SCALARS = frozenset((int, float, str, bool, type(None)))
+
 
 def _encode(obj: Any) -> Any:
+    if type(obj) in _SCALARS:
+        return {"__t": "s", "v": obj}
     if isinstance(obj, dict):
         return {"__t": "d", "v": {k: _encode(v) for k, v in obj.items()}}
     if isinstance(obj, (list, tuple)):
-        return {"__t": "l" if isinstance(obj, list) else "t", "v": [_encode(v) for v in obj]}
-    if isinstance(obj, (jax.Array, np.ndarray)):
+        tag = "l" if isinstance(obj, list) else "t"
+        if all(type(v) in _SCALARS for v in obj):
+            # packed scalar sequence: one node instead of len(obj) wrapper
+            # dicts (client RNG strings, metric streams — the bulk of a
+            # checkpoint's python nodes)
+            return {"__t": tag.upper(), "v": list(obj)}
+        return {"__t": tag, "v": [_encode(v) for v in obj]}
+    if isinstance(obj, (jax.Array, np.ndarray, np.generic)):
+        # numpy scalars (np.float32(x), ...) ride as 0-d arrays so their
+        # dtype survives the trip (a python float would widen them)
         arr = np.asarray(obj)
         if arr.dtype == jnp.bfloat16:
             return {"__t": "a", "dtype": _BF16, "shape": list(arr.shape),
@@ -43,11 +58,20 @@ def _decode(obj: Any) -> Any:
         return [_decode(v) for v in obj["v"]]
     if t == "t":
         return tuple(_decode(v) for v in obj["v"])
+    if t == "L":
+        return list(obj["v"])
+    if t == "T":
+        return tuple(obj["v"])
     if t == "a":
+        # frombuffer views the (immutable) msgpack payload, so the result
+        # is read-only; copy so restored state is mutable like the
+        # arrays it replaces (optimizer updates mutate in place).
         shape = tuple(obj["shape"])
         if obj["dtype"] == _BF16:
-            return np.frombuffer(obj["data"], np.uint16).reshape(shape).view(jnp.bfloat16)
-        return np.frombuffer(obj["data"], np.dtype(obj["dtype"])).reshape(shape)
+            return (np.frombuffer(obj["data"], np.uint16).reshape(shape)
+                    .view(jnp.bfloat16).copy())
+        return (np.frombuffer(obj["data"], np.dtype(obj["dtype"]))
+                .reshape(shape).copy())
     return obj["v"]
 
 

@@ -1,0 +1,55 @@
+"""Fault-tolerant checkpoint/resume subsystem (DESIGN.md §12).
+
+Four pieces:
+
+* :mod:`repro.ckpt.schema` — the versioned run-state pytree:
+  :func:`capture_run_state` / :func:`restore_run_state` cover params,
+  optimizer state, strategy ``agg_state``, channel chain state + PRNG
+  keys, client data-RNG streams, estimator posteriors, telemetry
+  cursors and the round counter.
+* :mod:`repro.ckpt.writer` — sharding-aware serialization with
+  sha256-checksummed atomic commits and keep-last-k retention;
+  :class:`AsyncCheckpointer` overlaps the write with the next chunk's
+  device compute.
+* :mod:`repro.ckpt.keys` — typed jax PRNG-key (de)serialization.
+* :mod:`repro.ckpt.preemption` — :class:`PreemptionGuard`, latching
+  SIGTERM/SIGINT so the launcher drains and commits before exit.
+
+Entry points: ``FLTrainer.run(ckpt_dir=..., ckpt_every=...,
+resume_from=...)`` and ``launch/train.py --ckpt-dir --ckpt-every
+--resume``.
+"""
+
+from repro.ckpt.keys import decode_prng_key, encode_prng_key, is_encoded_key
+from repro.ckpt.preemption import PreemptionGuard
+from repro.ckpt.schema import (
+    CKPT_VERSION,
+    capture_run_state,
+    restore_run_state,
+    rng_from_json,
+    rng_state_to_json,
+)
+from repro.ckpt.writer import (
+    AsyncCheckpointer,
+    CheckpointWriter,
+    read_state,
+    snapshot,
+    write_state,
+)
+
+__all__ = [
+    "CKPT_VERSION",
+    "AsyncCheckpointer",
+    "CheckpointWriter",
+    "PreemptionGuard",
+    "capture_run_state",
+    "decode_prng_key",
+    "encode_prng_key",
+    "is_encoded_key",
+    "read_state",
+    "restore_run_state",
+    "rng_from_json",
+    "rng_state_to_json",
+    "snapshot",
+    "write_state",
+]

@@ -1,0 +1,41 @@
+"""PRNG-key (de)serialization for checkpointable state.
+
+jax has two key flavors: raw ``uint32`` arrays (``jax.random.PRNGKey``)
+and typed key arrays (``jax.random.key``, e.g. the channel subsystem's
+``rbg`` keys).  Raw keys are ordinary arrays and round-trip through the
+msgpack codec unchanged; typed keys carry an opaque extended dtype that
+no serializer understands, so they are exchanged for a tagged dict of
+``(impl name, key_data)`` and rebuilt with ``wrap_key_data`` — bitwise
+the same key, same impl, on restore.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["encode_prng_key", "decode_prng_key", "is_encoded_key"]
+
+_TAG = "__prng_key__"
+
+
+def encode_prng_key(key: Any) -> Any:
+    """Typed key array -> tagged dict; anything else passes through."""
+    if isinstance(key, jax.Array) and jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return {_TAG: str(jax.random.key_impl(key)),
+                "data": np.asarray(jax.random.key_data(key))}
+    return key
+
+
+def is_encoded_key(obj: Any) -> bool:
+    return isinstance(obj, dict) and _TAG in obj
+
+
+def decode_prng_key(obj: Any) -> Any:
+    """Inverse of :func:`encode_prng_key` (pass-through for raw keys)."""
+    if is_encoded_key(obj):
+        return jax.random.wrap_key_data(jnp.asarray(obj["data"]), impl=obj[_TAG])
+    return jnp.asarray(obj)

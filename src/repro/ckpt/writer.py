@@ -1,0 +1,300 @@
+"""Async, sharding-aware checkpoint writer (DESIGN.md §12).
+
+The write path is split in two so device compute and checkpoint I/O
+overlap, in the spirit of maxtext's standalone checkpointer:
+
+1. **snapshot** (caller thread, at a chunk boundary): walk the state
+   pytree and replace every ``jax.Array`` with a :class:`_ArraySnap`
+   holding *references* to its addressable shards.  jax arrays are
+   immutable, so holding the references is free and safe — no device
+   sync, no host copy.  Mutable host containers (numpy arrays, lists,
+   dicts) are copied here, because the trainer keeps mutating them
+   while the writer thread serializes.
+2. **write** (background thread, overlapped with the next chunk's
+   device execution): per shard, ``np.asarray(shard.data)`` pulls that
+   shard's bytes to host — driven by each array's ``Sharding``, so a
+   client-axis-sharded ``(n, d)`` stack is written shard-by-shard and
+   never gathered — then the tree is serialized with the msgpack codec
+   (``repro.checkpoint.io``), sha256-checksummed, and committed
+   atomically.
+
+Commit protocol: the payload is written to a temp file and renamed to
+``ckpt_<step>.msgpack``; only then is the ``.sha256`` sidecar renamed
+into place.  A checkpoint *exists* iff its sidecar exists, so a crash
+mid-write leaves at most an ignored orphan payload, never a torn
+checkpoint.  ``load`` re-hashes the payload against the sidecar and
+refuses a mismatch.  After each commit, retention deletes committed
+checkpoints beyond ``keep`` (sidecar first — deleting it atomically
+un-commits the payload).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pathlib
+import queue
+import re
+import tempfile
+import threading
+from typing import Any, List, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+
+__all__ = [
+    "snapshot",
+    "write_state",
+    "read_state",
+    "CheckpointWriter",
+    "AsyncCheckpointer",
+]
+
+_SHARDED = "__sharded__"
+_STEP_RE = re.compile(r"^ckpt_(\d{8})\.msgpack$")
+
+
+@dataclasses.dataclass
+class _ArraySnap:
+    """A jax array captured as per-shard device references (no copy)."""
+
+    dtype: str
+    shape: Tuple[int, ...]
+    shards: List[Tuple[Tuple[int, ...], Tuple[int, ...], Any]]  # (start, stop, buf)
+
+
+def _shard_bounds(index, shape) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    start, stop = [], []
+    for sl, dim in zip(index, shape):
+        a, b, step = sl.indices(dim)
+        if step != 1:
+            raise ValueError(f"non-contiguous shard slice {sl}")
+        start.append(a)
+        stop.append(b)
+    return tuple(start), tuple(stop)
+
+
+def snapshot(tree: Any) -> Any:
+    """Copy-free capture of a state pytree: jax arrays become
+    :class:`_ArraySnap` shard references, host state is deep-copied."""
+    if type(tree) in ckpt_io._SCALARS:
+        return tree
+    if isinstance(tree, dict):
+        return {k: snapshot(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [snapshot(v) for v in tree]
+        return t if isinstance(tree, list) else tuple(t)
+    if isinstance(tree, jax.Array):
+        shards = [(*_shard_bounds(s.index, tree.shape), s.data)
+                  for s in tree.addressable_shards]
+        return _ArraySnap(str(tree.dtype), tuple(tree.shape), shards)
+    if isinstance(tree, np.ndarray):
+        return np.array(tree)  # the trainer may mutate host arrays later
+    return tree
+
+
+def _materialize(tree: Any) -> Any:
+    """Writer-thread half of the snapshot: device->host per shard."""
+    if type(tree) in ckpt_io._SCALARS:
+        return tree
+    if isinstance(tree, dict):
+        return {k: _materialize(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [_materialize(v) for v in tree]
+        return t if isinstance(tree, list) else tuple(t)
+    if isinstance(tree, _ArraySnap):
+        return {_SHARDED: 1, "dtype": tree.dtype, "shape": list(tree.shape),
+                "shards": [{"start": list(a), "stop": list(b),
+                            "data": np.asarray(buf)}
+                           for a, b, buf in tree.shards]}
+    return tree
+
+
+def _reassemble(tree: Any) -> Any:
+    """Rebuild full arrays from decoded per-shard payloads."""
+    if isinstance(tree, dict):
+        if _SHARDED in tree:
+            shards = tree["shards"]
+            shape = tuple(tree["shape"])
+            out = np.empty(shape, dtype=shards[0]["data"].dtype)
+            for sh in shards:
+                idx = tuple(slice(a, b) for a, b in zip(sh["start"], sh["stop"]))
+                out[idx] = sh["data"]
+            return out
+        return {k: _reassemble(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [_reassemble(v) for v in tree]
+        return t if isinstance(tree, list) else tuple(t)
+    return tree
+
+
+def _sha_path(path: pathlib.Path) -> pathlib.Path:
+    return path.with_suffix(path.suffix + ".sha256")
+
+
+def _atomic_write(path: pathlib.Path, data: bytes) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with tempfile.NamedTemporaryFile(dir=path.parent, delete=False) as f:
+        f.write(data)
+        tmp = f.name
+    os.replace(tmp, path)
+
+
+def write_state(path, tree: Any, *, snapshotted: bool = False) -> pathlib.Path:
+    """Serialize one state pytree to ``path`` with the commit protocol
+    (payload rename, then checksum sidecar rename)."""
+    path = pathlib.Path(path)
+    snap = tree if snapshotted else snapshot(tree)
+    payload = msgpack.packb(ckpt_io._encode(_materialize(snap)),
+                            use_bin_type=True)
+    digest = hashlib.sha256(payload).hexdigest()
+    _atomic_write(path, payload)
+    _atomic_write(_sha_path(path), f"{digest}  {path.name}\n".encode())
+    return path
+
+
+def read_state(path) -> Any:
+    """Load + verify one committed checkpoint file."""
+    path = pathlib.Path(path)
+    payload = path.read_bytes()
+    sha = _sha_path(path)
+    if sha.exists():
+        want = sha.read_text().split()[0]
+        got = hashlib.sha256(payload).hexdigest()
+        if got != want:
+            raise ValueError(
+                f"checkpoint {path} is corrupt: sha256 {got[:12]}... != "
+                f"recorded {want[:12]}...")
+    return _reassemble(ckpt_io._decode(msgpack.unpackb(payload, raw=False)))
+
+
+class CheckpointWriter:
+    """Synchronous step-indexed checkpoint directory with retention.
+
+    Files are ``ckpt_<step:08d>.msgpack`` (+ ``.sha256`` sidecar); a
+    step is *committed* iff its sidecar exists.  ``save`` commits a new
+    step, then garbage-collects committed steps beyond ``keep`` (newest
+    kept; ``keep <= 0`` keeps everything).
+    """
+
+    def __init__(self, directory, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.keep = int(keep)
+
+    def path_for(self, step: int) -> pathlib.Path:
+        return self.dir / f"ckpt_{int(step):08d}.msgpack"
+
+    def steps(self) -> List[int]:
+        if not self.dir.is_dir():
+            return []
+        out = []
+        for p in self.dir.iterdir():
+            m = _STEP_RE.match(p.name)
+            if m and _sha_path(p).exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any, *, snapshotted: bool = False) -> pathlib.Path:
+        path = write_state(self.path_for(step), tree, snapshotted=snapshotted)
+        self._gc()
+        return path
+
+    def load(self, step: Optional[int] = None) -> Any:
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        return read_state(self.path_for(step))
+
+    def _gc(self) -> None:
+        if self.keep <= 0:
+            return
+        for step in self.steps()[:-self.keep]:
+            p = self.path_for(step)
+            _sha_path(p).unlink(missing_ok=True)  # un-commit first
+            p.unlink(missing_ok=True)
+
+
+_STOP = object()
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing over a :class:`CheckpointWriter`.
+
+    ``save(step, tree)`` snapshots on the caller thread (cheap: shard
+    references + host copies) and returns immediately; serialization,
+    per-shard host transfer, hashing, the atomic commit and retention
+    all run on one daemon worker thread, overlapped with whatever the
+    caller does next (the next chunk's device compute).  ``wait()``
+    drains the queue and re-raises any writer-side failure; ``close()``
+    drains and stops the worker.  Saves commit in submission order.
+    """
+
+    def __init__(self, directory, keep: int = 3):
+        self.writer = CheckpointWriter(directory, keep=keep)
+        self._q: "queue.Queue" = queue.Queue()
+        self._error: Optional[BaseException] = None
+        self._worker = threading.Thread(
+            target=self._run, name="ckpt-writer", daemon=True)
+        self._worker.start()
+
+    # -- worker ----------------------------------------------------------
+    def _run(self) -> None:
+        try:
+            # Linux nice() is per-thread: deprioritize the writer so it
+            # fills scheduler gaps instead of preempting XLA's compute
+            # pool (whose fork-join regions stall on the slowest worker)
+            os.nice(10)
+        except OSError:
+            pass
+        while True:
+            item = self._q.get()
+            try:
+                if item is _STOP:
+                    return
+                step, snap = item
+                self.writer.save(step, snap, snapshotted=True)
+            except BaseException as e:  # surfaced at the next save/wait
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    # -- API -------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> None:
+        """Snapshot now, write in the background."""
+        self._raise_pending()
+        if not self._worker.is_alive():
+            raise RuntimeError("AsyncCheckpointer is closed")
+        self._q.put((int(step), snapshot(tree)))
+
+    def wait(self) -> None:
+        """Block until every queued save has committed."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        if self._worker.is_alive():
+            self._q.put(_STOP)
+            self._worker.join()
+        self._raise_pending()
+
+    # passthroughs
+    def load(self, step: Optional[int] = None) -> Any:
+        self.wait()
+        return self.writer.load(step)
+
+    def latest_step(self) -> Optional[int]:
+        return self.writer.latest_step()

@@ -142,6 +142,16 @@ class ExperimentSpec:
             ``jax.profiler`` trace over rounds ``[profile_start,
             profile_start + profile_rounds)``.
         log_every: print a cumulative rounds/sec line every N rounds.
+
+    Checkpointing (DESIGN.md §12):
+        ckpt_dir: directory receiving ``ckpt_NNNNNNNN.msgpack`` run-state
+            snapshots (async, sha256-committed).  None disables.
+        ckpt_every: checkpoint cadence in rounds (must be a multiple of
+            ``chunk``); 0 = a single final checkpoint at run end.
+        ckpt_keep: committed checkpoints retained (keep-last-k GC).
+        resume_from: checkpoint file — or directory, meaning its latest
+            committed step — to restore before the first round.  Sinks
+            open in append mode and the manifest records ``resumed_from``.
     """
 
     # -- task ----------------------------------------------------------
@@ -179,6 +189,11 @@ class ExperimentSpec:
     profile_start: int = 0
     profile_rounds: int = 4
     log_every: int = 0             # stderr throughput cadence (0 = off)
+    # -- checkpointing (DESIGN.md §12) ----------------------------------
+    ckpt_dir: Optional[str] = None   # async checkpoint target (None = off)
+    ckpt_every: int = 0              # cadence in rounds (0 = final-only)
+    ckpt_keep: int = 3               # committed checkpoints retained
+    resume_from: Optional[str] = None  # checkpoint file/dir to restore
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)
@@ -206,12 +221,18 @@ class Experiment:
 
     def run(self, rounds: Optional[int] = None, *, chunk: Optional[int] = None,
             eval_every: int = 0, verbose: bool = False,
-            no_trace: bool = False) -> TrainLog:
+            no_trace: bool = False,
+            resume_from: Optional[str] = None) -> TrainLog:
+        resume = resume_from if resume_from is not None else self.spec.resume_from
         return self.trainer.run(rounds if rounds is not None else self.spec.rounds,
                                 chunk=chunk if chunk is not None else self.spec.chunk,
                                 eval_every=eval_every, verbose=verbose,
                                 no_trace=no_trace,
-                                log_every=self.spec.log_every)
+                                log_every=self.spec.log_every,
+                                ckpt_dir=self.spec.ckpt_dir,
+                                ckpt_every=self.spec.ckpt_every,
+                                ckpt_keep=self.spec.ckpt_keep,
+                                resume_from=resume)
 
     def close(self) -> None:
         """Finalize telemetry: per-client summary event, sink flush, and
@@ -395,9 +416,10 @@ def build_experiment(spec: ExperimentSpec) -> Experiment:
     manifest = None
     if spec.metrics_dir is not None:
         mdir = pathlib.Path(spec.metrics_dir)
+        resuming = spec.resume_from is not None
         metrics_logger = MetricsLogger([
-            JsonlSink(mdir / "events.jsonl"),
-            CsvSummarySink(mdir / "rounds.csv"),
+            JsonlSink(mdir / "events.jsonl", resume=resuming),
+            CsvSummarySink(mdir / "rounds.csv", resume=resuming),
         ])
         codec = getattr(strategy, "codec", None)
         manifest = RunManifest.collect(
@@ -408,6 +430,7 @@ def build_experiment(spec: ExperimentSpec) -> Experiment:
             n_clients=n,
             mode=spec.mode,
             local_steps=local_steps,
+            resumed_from=spec.resume_from,
         )
         manifest.write(mdir)
     profile = None

@@ -48,6 +48,7 @@ default path's TrainLog streams are unchanged to the bit.
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -189,8 +190,18 @@ class FLTrainer:
         self._seed = seed
         # no-trace mode: in-scan sampler fn + carried (channel_state, rng)
         self._sampled_scan_fn = None
+        self._sampled_init_fn = None
         self._channel_state = None
         self._channel_rng = None
+        # checkpoint/resume (DESIGN.md §12): the authoritative round
+        # counter, the client-RNG snapshot at the consumed-round boundary
+        # (the chunked engine prefetches past it), and the per-run async
+        # checkpointer wiring set up by `run`.
+        self.round = 0
+        self._data_rng_snapshot: Optional[List[str]] = None
+        self._ckpt = None
+        self._ckpt_every = 0
+        self._ckpt_last = -1
         self.log = self.metrics.log
 
     # ------------------------------------------------------------------
@@ -206,6 +217,60 @@ class FLTrainer:
         elif self.rc.mode == "weighted_grad":
             out = {k: v[:, :, 0] for k, v in out.items()}
         return out
+
+    # -- checkpoint/resume (DESIGN.md §12) -----------------------------
+    def _client_rng_states(self) -> List[str]:
+        """Per-client data-RNG states at the consumed-round boundary.
+
+        The chunked engine prefetches the next chunk's batches *before*
+        the checkpoint point, so the live generators sit one chunk ahead
+        of the boundary; ``_run_chunks`` snapshots the boundary states
+        pre-prefetch and this prefers that snapshot."""
+        if self._data_rng_snapshot is not None:
+            return list(self._data_rng_snapshot)
+        from repro.ckpt.schema import rng_state_to_json
+        return [rng_state_to_json(c._rng) for c in self.clients]
+
+    def save_checkpoint(self, path) -> pathlib.Path:
+        """Synchronously write the complete run state to one file."""
+        from repro.ckpt.schema import capture_run_state
+        from repro.ckpt.writer import write_state
+        return write_state(path, capture_run_state(self))
+
+    def restore(self, source) -> int:
+        """Restore from a checkpoint file or directory (latest step).
+
+        The trainer must be assembled with the same configuration as the
+        checkpointed run; returns the restored round counter."""
+        from repro.ckpt.schema import restore_run_state
+        from repro.ckpt.writer import CheckpointWriter, read_state
+        p = pathlib.Path(source)
+        state = CheckpointWriter(p).load() if p.is_dir() else read_state(p)
+        restore_run_state(self, state)
+        return self.round
+
+    def _maybe_ckpt(self) -> None:
+        """Periodic async save at a round/chunk boundary."""
+        if self._ckpt is None or self._ckpt_every <= 0:
+            return
+        if self.round % self._ckpt_every == 0 and self.round != self._ckpt_last:
+            from repro.ckpt.schema import capture_run_state
+            self._ckpt.save(self.round, capture_run_state(self))
+            self._ckpt_last = self.round
+
+    def _finish_ckpt(self) -> None:
+        """End-of-run: commit a final checkpoint, drain, shut down."""
+        if self._ckpt is None:
+            return
+        try:
+            if self.round != self._ckpt_last:
+                from repro.ckpt.schema import capture_run_state
+                self._ckpt.save(self.round, capture_run_state(self))
+                self._ckpt_last = self.round
+            self._ckpt.wait()
+        finally:
+            self._ckpt.close()
+            self._ckpt = None
 
     # ------------------------------------------------------------------
     def _ingest_adaptive(self, r: int, tau_up: np.ndarray, tau_dd: np.ndarray,
@@ -277,6 +342,9 @@ class FLTrainer:
                                   verbose)
         self._maybe_eval(r, eval_every, verbose)
         self._maybe_log_throughput(r + 1)
+        self.round = r + 1
+        self._data_rng_snapshot = None  # live RNGs sit at the boundary
+        self._maybe_ckpt()
 
     # ------------------------------------------------------------------
     def _effective_chunk(self, chunk: int, eval_every: int) -> int:
@@ -348,7 +416,12 @@ class FLTrainer:
                 (self.params, self.server_state, self.agg_state,
                  metrics) = self._scan_fn(*args)
             # host prefetch: the dispatch above is async, so stacking the
-            # next chunk's batches overlaps this chunk's device execution
+            # next chunk's batches overlaps this chunk's device execution.
+            # A checkpoint taken at this boundary must see the client
+            # RNGs *before* the prefetch advances them — snapshot first.
+            from repro.ckpt.schema import rng_state_to_json
+            self._data_rng_snapshot = [rng_state_to_json(cl._rng)
+                                       for cl in self.clients]
             batches = self._stack_batches(k) if c + 1 < n_chunks else None
             dt = self.meter.stop(k, fence=metrics)
             if self.profile is not None:
@@ -369,6 +442,8 @@ class FLTrainer:
                         )
             self._maybe_eval(r + k - 1, eval_every, verbose)
             self._maybe_log_throughput(r + k)
+            self.round = r + k
+            self._maybe_ckpt()
 
     def _run_chunks_sampled(self, r0: int, k: int,
                             eval_every: int, verbose: bool) -> None:
@@ -382,9 +457,16 @@ class FLTrainer:
                 self._loss_fn, self._client_opt, self.server_opt, self.rc,
                 channel_sampler=sample_fn, telemetry=self.telemetry))
             self.compiles.register("sampled_scan_fn", self._sampled_scan_fn)
+            self._sampled_init_fn = init_fn
+        # state init is guarded separately from fn build: a restored run
+        # arrives here with `_channel_state`/`_channel_rng` already set
+        # (the checkpointed carry) and a fresh, unbuilt scan fn — the
+        # lazy init must not clobber the restored carry.  The rng, not
+        # the state, is the sentinel: static samplers carry state `()`.
+        if self._channel_rng is None:
             key = jax.random.PRNGKey(self._seed)
             key, sub = jax.random.split(key)
-            self._channel_state = init_fn(sub)
+            self._channel_state = self._sampled_init_fn(sub)
             self._channel_rng = key
         if self.profile is not None:
             self.profile.maybe_start(r0)
@@ -415,11 +497,15 @@ class FLTrainer:
         self.metrics.log_rounds(r0, metrics, k)
         self._maybe_eval(r0 + k - 1, eval_every, verbose)
         self._maybe_log_throughput(r0 + k)
+        self.round = r0 + k
+        self._data_rng_snapshot = None  # no prefetch on this path
+        self._maybe_ckpt()
 
     # ------------------------------------------------------------------
     def run(self, rounds: int, *, chunk: int = 1, eval_every: int = 0,
             verbose: bool = False, no_trace: bool = False,
-            log_every: int = 0) -> TrainLog:
+            log_every: int = 0, ckpt_dir=None, ckpt_every: int = 0,
+            ckpt_keep: int = 3, resume_from=None) -> TrainLog:
         """Train for ``rounds`` communication rounds.
 
         ``chunk=K`` compiles K rounds into one device program and syncs
@@ -445,10 +531,36 @@ class FLTrainer:
         ``log_every=N`` prints a cumulative rounds/sec line to stderr
         every N rounds (throughput is measured either way — see
         ``self.meter``).
+
+        **Checkpoint/resume** (DESIGN.md §12): ``ckpt_dir`` enables
+        checkpointing — an async save of the complete run state every
+        ``ckpt_every`` rounds (``0`` = only the final end-of-run save),
+        keep-last-``ckpt_keep`` retention.  When chunked, ``ckpt_every``
+        must be a multiple of the chunk (the host only syncs at chunk
+        boundaries).  ``resume_from`` (a checkpoint file or a ckpt
+        directory, whose latest committed step is used) restores the
+        state *first* and reinterprets ``rounds`` as the **total** round
+        target: ``run(100, resume_from=ckpt_at_40)`` trains rounds
+        40..99, continuing bitwise-identically to the uninterrupted run.
         """
-        start = self.log.rounds[-1] + 1 if self.log.rounds else 0
-        end = start + rounds
+        if resume_from is not None:
+            self.restore(resume_from)
+        start = self.round
+        end = rounds if resume_from is not None else start + rounds
+        if end < start:
+            raise ValueError(
+                f"resume target {end} is behind the restored round {start}")
         k = self._effective_chunk(int(chunk), eval_every)
+        self._ckpt_every = int(ckpt_every)
+        if ckpt_dir is not None:
+            if self._ckpt_every > 0 and k > 1 and self._ckpt_every % k != 0:
+                raise ValueError(
+                    f"ckpt_every={ckpt_every} must be a multiple of the "
+                    f"chunk size {k}: the chunked engine only reaches the "
+                    "host at chunk boundaries")
+            from repro.ckpt.writer import AsyncCheckpointer
+            self._ckpt = AsyncCheckpointer(ckpt_dir, keep=ckpt_keep)
+            self._ckpt_last = -1
         self._log_every = int(log_every)
         self._last_tlog = start
         if no_trace:
@@ -483,9 +595,11 @@ class FLTrainer:
         return self._finish_run()
 
     def _finish_run(self) -> TrainLog:
-        """End-of-run bookkeeping: close a dangling profile window and
-        flush the sinks (the logger itself stays open — ``run`` may be
-        called again; owners call ``self.metrics.close()`` at teardown)."""
+        """End-of-run bookkeeping: final checkpoint commit + writer
+        drain, close a dangling profile window and flush the sinks (the
+        logger itself stays open — ``run`` may be called again; owners
+        call ``self.metrics.close()`` at teardown)."""
+        self._finish_ckpt()
         if self.profile is not None:
             self.profile.close()
         self.metrics.flush()

@@ -57,6 +57,44 @@ CLIENT_WD = 1e-4
 SERVER_MOMENTUM = 0.9
 
 
+def train_state_shardings(
+    arch_id: str,
+    shape_name: str,
+    mesh,
+    *,
+    aggregation: StrategySpec = "colrel",
+    fl_mode: str | None = None,
+    cfg_override=None,
+) -> Dict[str, Any]:
+    """Shardings for the checkpointable train-state leaves.
+
+    ``repro.ckpt`` writes each array per-shard via its ``Sharding`` (the
+    ``(n, d)`` client-axis stacks never gather); on restore the reverse
+    trip needs the same layouts to ``jax.device_put`` the reassembled
+    hosts arrays back onto the production mesh.  Returns
+    ``{"params", "server_state", "agg_state"}`` sharding trees matching
+    :func:`build_step`'s train in/out shardings (DESIGN.md §12).
+    """
+    mode = fl_mode or (cfg_override or get_arch_cfg(arch_id)).fl_mode
+    specs = input_specs(arch_id, shape_name, mesh, cfg=cfg_override,
+                        fl_mode=mode)
+    cfg = specs["cfg"]
+    fsdp = mode in ("client_sequential", "weighted_grad", "weighted_flat")
+    strategy = strategy_registry.resolve(aggregation)
+    d_flat = flatten.flat_spec(specs["params"]).d
+    agg_state = jax.eval_shape(
+        lambda: strategy.init_state(n_clients(mesh), d_flat)
+    )
+    return {
+        "params": shard_rules.param_shardings(cfg, specs["params"], mesh,
+                                              fsdp=fsdp),
+        "server_state": shard_rules.param_shardings(cfg, specs["server_state"],
+                                                    mesh, fsdp=fsdp),
+        "agg_state": shard_rules.client_state_shardings(mesh, agg_state,
+                                                        n_clients(mesh)),
+    }
+
+
 def build_step(
     arch_id: str,
     shape_name: str,

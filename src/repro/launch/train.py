@@ -35,6 +35,7 @@ rounds/sec to stderr every N rounds.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import pathlib
 import sys
 import time
@@ -44,6 +45,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import strategies as strategy_registry
+from repro.ckpt import (
+    CKPT_VERSION,
+    AsyncCheckpointer,
+    CheckpointWriter,
+    PreemptionGuard,
+    rng_from_json,
+    rng_state_to_json,
+)
 from repro.configs.base import get_arch
 from repro.configs.channels import CHANNEL_PRESETS, make_channel
 from repro.core import optimize_weights, topology
@@ -97,6 +106,17 @@ def main():
                     help="capture a jax.profiler trace into this dir")
     ap.add_argument("--profile-rounds", type=int, default=4,
                     help="profiler window length in rounds (with --profile-dir)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (async sha256-committed "
+                         "ckpt_NNNNNNNN.msgpack snapshots; DESIGN.md §12)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint cadence in rounds (0 = final only; "
+                         "must be a multiple of --chunk)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="committed checkpoints retained (keep-last-k GC)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest committed checkpoint in "
+                         "--ckpt-dir and continue to --rounds")
     args = ap.parse_args()
 
     # the fused kernel only exists on the colrel path; refuse the
@@ -109,6 +129,14 @@ def main():
                  f"(got chunk={args.chunk}, rounds={args.rounds})")
     if args.no_trace and args.chunk == 1:
         ap.error("--no-trace runs through the scan engine; pass --chunk K > 1")
+    if (args.resume or args.ckpt_every) and not args.ckpt_dir:
+        ap.error("--resume and --ckpt-every require --ckpt-dir")
+    if args.ckpt_every and args.ckpt_every % args.chunk != 0:
+        # the scan engine only reaches the host at chunk boundaries, so a
+        # misaligned cadence cannot be honored — refuse, don't approximate
+        ap.error(f"--ckpt-every must be a multiple of --chunk (got "
+                 f"ckpt_every={args.ckpt_every}, chunk={args.chunk}): "
+                 f"checkpoints commit at chunk boundaries only")
     strategy = strategy_registry.get(
         args.aggregation,
         **({"fused": "kernel"} if args.fused_kernel
@@ -135,17 +163,34 @@ def main():
     sstate = server_opt.init(params)
     agg_state = strategy.init_state(n, flat_spec(params).d)
 
+    # checkpoint discovery (DESIGN.md §12): find the restore source up
+    # front so the telemetry sinks open in the right mode and the
+    # manifest can record provenance
+    resume_state = None
+    resume_path = None
+    if args.resume:
+        reader = CheckpointWriter(args.ckpt_dir, keep=args.ckpt_keep)
+        step = reader.latest_step()
+        if step is None:
+            ap.error(f"--resume: no committed checkpoint in {args.ckpt_dir}")
+        resume_path = reader.path_for(step)
+        resume_state = reader.load(step)
+        print(f"resuming from {resume_path} (round {step})")
+
     # observability wiring (DESIGN.md §11)
     telemetry = args.metrics_dir is not None
     logger = None
     if telemetry:
         mdir = pathlib.Path(args.metrics_dir)
-        logger = MetricsLogger([JsonlSink(mdir / "events.jsonl"),
-                                CsvSummarySink(mdir / "rounds.csv")])
+        logger = MetricsLogger([JsonlSink(mdir / "events.jsonl",
+                                          resume=args.resume),
+                                CsvSummarySink(mdir / "rounds.csv",
+                                               resume=args.resume)])
         RunManifest.collect(
             vars(args), strategy=strategy.name, channel=args.channel,
             codec=getattr(getattr(strategy, "codec", None), "name", None),
             arch=cfg.name, n_clients=n,
+            resumed_from=resume_path,
         ).write(mdir)
         print(f"telemetry -> {mdir}")
     profile = (ProfileWindow(args.profile_dir, rounds=args.profile_rounds)
@@ -169,6 +214,7 @@ def main():
                   f"{meter.rounds_per_sec():.2f} rounds/s", file=sys.stderr)
 
     def finish() -> None:
+        _stack.close()  # reinstall the original signal handlers
         if profile is not None:
             profile.close()
         if logger is not None:
@@ -180,6 +226,98 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     V, S, B, T = cfg.vocab_size, args.seq_len, args.batch, args.local_steps
+
+    # apply the restored state: model/optimizer/strategy tensors, the
+    # channel generator, the batch rng, and the telemetry cursors
+    r_start = 0
+    ch_state = ch_rng = None  # no-trace scan carry (set below when used)
+    if resume_state is not None:
+        if resume_state.get("version") != CKPT_VERSION:
+            sys.exit(f"checkpoint version {resume_state.get('version')!r} != "
+                     f"supported {CKPT_VERSION}")
+        for field, want in (("kind", "launch"), ("strategy", strategy.name),
+                            ("arch", cfg.name)):
+            got = resume_state.get(field)
+            if got != want:
+                sys.exit(f"checkpoint {field} mismatch: saved {got!r}, "
+                         f"launching {want!r}")
+        if (resume_state.get("no_trace") is not None) != args.no_trace:
+            sys.exit("checkpoint --no-trace mode does not match this launch; "
+                     "resume with the same connectivity flags")
+        params = jax.tree.map(jnp.asarray, resume_state["params"])
+        sstate = jax.tree.map(jnp.asarray, resume_state["server_state"])
+        agg_state = strategy.restore_state(resume_state["agg_state"])
+        rng = rng_from_json(resume_state["rng"])
+        channel.restore_state(resume_state["channel"])
+        if telemetry:
+            if resume_state.get("streak") is None:
+                sys.exit("checkpoint carries no telemetry state but "
+                         "--metrics-dir is set; resume with matching flags")
+            streak = jnp.asarray(resume_state["streak"], jnp.int32)
+            if logger is not None and resume_state.get("metrics") is not None:
+                logger.restore_state(resume_state["metrics"])
+        r_start = int(resume_state["round"])
+        if r_start >= args.rounds:
+            print(f"checkpoint already at round {r_start} >= --rounds "
+                  f"{args.rounds}; nothing to do")
+            return
+        if r_start % args.chunk != 0:
+            sys.exit(f"checkpoint round {r_start} is not a --chunk "
+                     f"{args.chunk} boundary")
+        last_tlog = r_start
+
+    # async checkpointing + preemption safety (DESIGN.md §12): snapshots
+    # enqueue at round boundaries and serialize on the writer thread,
+    # overlapped with the next block's device compute; SIGTERM/SIGINT
+    # latches and the loop drains + commits a final checkpoint at the
+    # next boundary instead of dying mid-write.
+    ckpt = (AsyncCheckpointer(args.ckpt_dir, keep=args.ckpt_keep)
+            if args.ckpt_dir else None)
+    ckpt_last = -1
+    _stack = contextlib.ExitStack()
+    guard = _stack.enter_context(PreemptionGuard())
+
+    def capture(r_next: int) -> dict:
+        """The launcher's complete run state at round boundary r_next."""
+        return {
+            "version": CKPT_VERSION, "kind": "launch",
+            "round": int(r_next), "strategy": strategy.name,
+            "arch": cfg.name,
+            "params": params, "server_state": sstate,
+            "agg_state": strategy.checkpoint_state(agg_state),
+            "rng": rng_state_to_json(rng),
+            "channel": channel.checkpoint_state(),
+            "no_trace": ({"state": ch_state, "rng": ch_rng}
+                         if args.no_trace else None),
+            "streak": streak,
+            "metrics": logger.checkpoint_state() if logger else None,
+        }
+
+    def boundary(r_next: int) -> bool:
+        """Periodic checkpoint + preemption check at a round boundary;
+        True = stop the loop (``final_ckpt`` commits the last state)."""
+        nonlocal ckpt_last
+        if (ckpt is not None and args.ckpt_every
+                and r_next % args.ckpt_every == 0 and r_next != ckpt_last):
+            ckpt.save(r_next, capture(r_next))
+            ckpt_last = r_next
+        if guard.triggered:
+            print(f"[ckpt] preempted (signal {guard.signum}) at round "
+                  f"{r_next}; committing final checkpoint", file=sys.stderr)
+            return True
+        return False
+
+    def final_ckpt(r_next: int) -> None:
+        """Drain the async writer; commit a final checkpoint if the last
+        boundary was not already saved."""
+        nonlocal ckpt_last
+        if ckpt is None:
+            return
+        if r_next != ckpt_last:
+            ckpt.save(r_next, capture(r_next))
+            ckpt_last = r_next
+        ckpt.close()
+        print(f"[ckpt] committed round {r_next} -> {args.ckpt_dir}")
 
     def make_batches(lead: tuple) -> dict:
         toks = rng.integers(0, V, size=(*lead, S + 1), dtype=np.int32)
@@ -194,7 +332,8 @@ def main():
     if args.chunk == 1:
         round_fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.25), server_opt,
                                          rc, telemetry=telemetry))
-        for r in range(args.rounds):
+        done = r_start
+        for r in range(r_start, args.rounds):
             if profile is not None:
                 profile.maybe_start(r)
             meter.start()
@@ -215,6 +354,10 @@ def main():
                   f"participants={int(metrics['participation'])}/{n}  "
                   f"|delta|={float(metrics['delta_norm']):.3f}  "
                   f"({time.perf_counter() - t0:.2f}s)")
+            done = r + 1
+            if boundary(done):
+                break
+        final_ckpt(done)
         finish()
         return
 
@@ -233,11 +376,16 @@ def main():
             channel_sampler=sample_fn, telemetry=telemetry))
         ch_rng, sub = jax.random.split(jax.random.PRNGKey(args.seed))
         ch_state = init_fn(sub)
+        if resume_state is not None:
+            nt = resume_state["no_trace"]
+            ch_state = jax.tree.map(jnp.asarray, nt["state"])
+            ch_rng = jnp.asarray(nt["rng"])
     else:
         scan_fn = jax.jit(make_scan_round_fn(bundle.loss_fn, sgd(0.25),
                                              server_opt, rc,
                                              telemetry=telemetry))
-    for c in range(args.rounds // K):
+    done = r_start
+    for c in range(r_start // K, args.rounds // K):
         r0 = c * K
         if profile is not None:
             profile.maybe_start(r0)
@@ -273,6 +421,10 @@ def main():
               f"participants(mean)={part.mean():.1f}/{n}  "
               f"uplink={bits / 8e6:.1f} MB  "
               f"({dt:.2f}s, {K / dt:.1f} rounds/s)")
+        done = r0 + K
+        if boundary(done):
+            break
+    final_ckpt(done)
     finish()
 
 

@@ -89,6 +89,23 @@ class AggregationStrategy:
         """Initial carried state for ``n`` clients and flat dim ``d``."""
         return ()
 
+    def checkpoint_state(self, state: State) -> Any:
+        """Checkpointable form of the carried state (DESIGN.md §12).
+
+        The default returns the state pytree as-is — dict/list/tuple
+        nests of arrays (including raw ``uint32`` PRNG keys) round-trip
+        through the msgpack codec unchanged.  Override only when the
+        carried state holds something the codec cannot express."""
+        return state
+
+    def restore_state(self, tree: Any) -> State:
+        """Inverse of :meth:`checkpoint_state`: rebuild the carried
+        state from its checkpointed form (arrays come back as numpy;
+        re-device them so the first post-restore round sees the same
+        abstract values — and hence the same jit cache entry — as the
+        uninterrupted run)."""
+        return jax.tree.map(jnp.asarray, tree)
+
     def calibrate(self, model, A) -> "AggregationStrategy":
         """Hook for host-side calibration against link statistics
         (e.g. unbiasedness corrections).  Returns a (possibly new)

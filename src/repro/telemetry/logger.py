@@ -89,12 +89,18 @@ class JsonlSink(MetricsSink):
     ``write`` per chunk rather than one syscall per round.
     """
 
-    def __init__(self, path, buffer: int = 256):
+    def __init__(self, path, buffer: int = 256, resume: bool = False):
         self.path = pathlib.Path(path)
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._buf: List[str] = []
         self._buffer = max(1, int(buffer))
-        self.path.write_text("")  # truncate: one run per file
+        if not (resume and self.path.exists()):
+            self.path.write_text("")  # truncate: one run per file
+        # resume reopens in append mode: the stream continues after the
+        # prior run's events.  Events emitted after the restored
+        # checkpoint but before the kill stay in the file — the JSONL
+        # stream is at-least-once across a resume; consumers dedupe on
+        # (event, round) or take the last seq per key (DESIGN.md §12).
 
     def emit(self, event: Dict[str, Any]) -> None:
         self._buf.append(json.dumps(event, separators=(",", ":")))
@@ -124,11 +130,15 @@ class CsvSummarySink(MetricsSink):
     _COLS = ("round", "loss", "participation", "uplink_bits", "weight_sum",
              "weight_drift")
 
-    def __init__(self, path):
+    def __init__(self, path, resume: bool = False):
         self.path = pathlib.Path(path)
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._rows: List[str] = [",".join(self._COLS)]
         self._written = False
+        if resume and self.path.exists():
+            rows = self.path.read_text().splitlines()
+            if rows and rows[0] == self._rows[0]:
+                self._rows = rows
 
     def emit(self, event: Dict[str, Any]) -> None:
         if event.get("event") != "round":
@@ -136,6 +146,15 @@ class CsvSummarySink(MetricsSink):
         self._rows.append(",".join(
             repr(event[c]) if isinstance(event.get(c), float)
             else str(event.get(c, "")) for c in self._COLS))
+
+    def trim_rounds_after(self, r: int) -> None:
+        """Drop rows past round ``r`` — rounds the prior run logged
+        after the checkpoint being resumed (they will be re-trained and
+        re-logged), keeping the table exactly-once."""
+        self._rows = [self._rows[0]] + [
+            row for row in self._rows[1:]
+            if row and int(row.split(",", 1)[0]) <= r
+        ]
 
     def flush(self) -> None:
         self.path.write_text("\n".join(self._rows) + "\n")
@@ -177,6 +196,38 @@ class MetricsLogger:
         self._emit_client_summary()
         for s in self.sinks:
             s.close()
+
+    # -- checkpoint/resume (DESIGN.md §12) -------------------------------
+    def checkpoint_state(self) -> Dict[str, Any]:
+        """Everything needed to continue the metric streams seamlessly:
+        the monotonic ``seq`` cursor, the full TrainLog facade, and the
+        accumulated vector-metric histories."""
+        import dataclasses as _dc
+
+        return {
+            "seq": int(self._seq),
+            "log": _dc.asdict(self.log),
+            "vectors": {k: np.concatenate(v, axis=0)
+                        for k, v in self._vectors.items() if v},
+        }
+
+    def restore_state(self, state: Dict[str, Any]) -> None:
+        """Reinstate a checkpointed stream position.
+
+        The TrainLog lists are mutated *in place* so every alias
+        (``trainer.log is metrics.log``) observes the restored history;
+        sinks that can rewind (``trim_rounds_after``) drop rows the
+        prior run logged past the checkpoint."""
+        self._seq = int(state["seq"])
+        for name, vals in state["log"].items():
+            getattr(self.log, name)[:] = list(vals)
+        self._vectors = {k: [np.asarray(v)]
+                         for k, v in state.get("vectors", {}).items()}
+        last = self.log.rounds[-1] if self.log.rounds else -1
+        for s in self.sinks:
+            trim = getattr(s, "trim_rounds_after", None)
+            if trim is not None:
+                trim(last)
 
     # -- the deduped round append path ----------------------------------
     def log_rounds(self, r0: int, metrics: Dict[str, Any], k: int = 1) -> None:

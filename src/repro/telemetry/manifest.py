@@ -76,12 +76,16 @@ class RunManifest:
     jax_version: str = ""
     git_sha: Optional[str] = None
     created_unix: float = 0.0
+    # the checkpoint this run restored from (path or step label); None
+    # for a from-scratch run (DESIGN.md §12)
+    resumed_from: Optional[str] = None
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @classmethod
     def collect(cls, config: Dict[str, Any], *, strategy: Optional[str] = None,
                 channel: Optional[str] = None, codec: Optional[str] = None,
                 mesh_shape: Optional[Dict[str, int]] = None,
+                resumed_from: Optional[str] = None,
                 **extra: Any) -> "RunManifest":
         """Gather the environment-derived fields (backend, devices, jax
         version, git SHA) around the caller-supplied run identity."""
@@ -99,6 +103,7 @@ class RunManifest:
             jax_version=jax.__version__,
             git_sha=git_sha(cwd=str(pathlib.Path(__file__).parent)),
             created_unix=time.time(),
+            resumed_from=str(resumed_from) if resumed_from is not None else None,
             extra=_jsonable(extra),
         )
 

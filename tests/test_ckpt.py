@@ -1,0 +1,504 @@
+"""The checkpoint subsystem, component by component (DESIGN.md §12).
+
+Layers:
+  1. the msgpack codec (``checkpoint/io.py``) — bf16/tuple/scalar
+     round-trips and the decode-copy fix (restored arrays are mutable);
+  2. PRNG key encoding — typed jax keys survive the codec, raw uint32
+     key arrays pass through untouched;
+  3. the writer — sharded snapshot/reassembly, the sha256 commit
+     protocol (corruption refused, orphan payloads not committed),
+     keep-last-k retention, and the async writer's overlap semantics
+     (snapshot isolation, error surfacing, drain ordering);
+  4. state hooks — every registered strategy's ``agg_state``, every
+     channel family's gate state (mid-block and across-block), the link
+     estimator / adaptive schedule, and the MetricsLogger cursor +
+     sink resume behavior;
+  5. schema-level guards — strategy/version/telemetry/client-count
+     mismatches refuse to restore;
+  6. preemption — the launcher guard latches SIGTERM/SIGINT and
+     restores the original handlers on exit.
+"""
+
+import dataclasses
+import json
+import os
+import pathlib
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import strategies
+from repro.channel import (
+    ClusteredMarkovChannel,
+    ClusteredStaticChannel,
+    LinkEstimator,
+    MarkovChannel,
+    MobilityChannel,
+    StaticChannel,
+    gilbert_elliott,
+    gilbert_elliott_clustered,
+)
+from repro.channel.schedule import AdaptiveConfig, AdaptiveWeightSchedule
+from repro.checkpoint import io as ckpt_io
+from repro.ckpt import (
+    CKPT_VERSION,
+    AsyncCheckpointer,
+    CheckpointWriter,
+    PreemptionGuard,
+    decode_prng_key,
+    encode_prng_key,
+    read_state,
+    rng_from_json,
+    rng_state_to_json,
+    write_state,
+)
+from repro.core import topology
+from repro.telemetry import CsvSummarySink, JsonlSink, MetricsLogger, RunManifest
+
+
+def _trees_equal(a, b, path=""):
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb), path
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# 1. the msgpack codec: round-trips + the decode-copy fix
+# ---------------------------------------------------------------------------
+
+
+def test_io_roundtrip_bf16():
+    x = jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) / 7
+    back = ckpt_io._decode(ckpt_io._encode(np.asarray(x)))
+    assert back.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                  np.asarray(x, np.float32))
+
+
+def test_io_roundtrip_tuple_and_scalar():
+    tree = {"t": (np.float32(1.5), [np.arange(4), ()]),
+            "s": 3, "f": 2.25, "none": None, "b": True, "name": "adam"}
+    back = ckpt_io._decode(ckpt_io._encode(tree))
+    assert isinstance(back["t"], tuple)
+    assert isinstance(back["t"][1], list)
+    assert back["t"][1][1] == ()
+    assert back["t"][0] == np.float32(1.5)
+    assert back["t"][0].dtype == np.float32  # numpy scalars keep dtype
+    assert back["s"] == 3 and back["f"] == 2.25
+    assert back["none"] is None and back["b"] is True and back["name"] == "adam"
+    np.testing.assert_array_equal(back["t"][1][0], np.arange(4))
+
+
+def test_io_decoded_arrays_are_mutable():
+    """Seed-era bug: ``np.frombuffer`` yields read-only arrays, so a
+    restored optimizer state raised on its first in-place update."""
+    for arr in (np.arange(8, dtype=np.float32),
+                np.ones((2, 2), dtype=jnp.bfloat16)):
+        back = ckpt_io._decode(ckpt_io._encode(arr))
+        assert back.flags.writeable
+        back += 1  # the actual failure mode: in-place mutation
+
+
+# ---------------------------------------------------------------------------
+# 2. PRNG key encoding
+# ---------------------------------------------------------------------------
+
+
+def test_typed_key_roundtrips():
+    key = jax.random.key(42)
+    enc = encode_prng_key(key)
+    assert isinstance(enc, dict)
+    back = decode_prng_key(enc)
+    np.testing.assert_array_equal(jax.random.key_data(back),
+                                  jax.random.key_data(key))
+    # and the stream continues identically
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.uniform(back, (4,))),
+        np.asarray(jax.random.uniform(key, (4,))))
+
+
+def test_raw_key_passes_through():
+    key = jax.random.PRNGKey(7)  # raw uint32 — already codec-friendly
+    assert encode_prng_key(key) is key
+    tree = read_state(write_state(_tmp() / "k.msgpack", {"k": key}))
+    np.testing.assert_array_equal(tree["k"], np.asarray(key))
+
+
+_TMP = []
+
+
+def _tmp() -> pathlib.Path:
+    import tempfile
+    p = pathlib.Path(tempfile.mkdtemp())
+    _TMP.append(p)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# 3. the writer
+# ---------------------------------------------------------------------------
+
+
+def _state_tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "agg": (jnp.zeros((4, 6)), ()),
+        "host": np.arange(5.0),
+        "round": 7,
+        "rng": rng_state_to_json(np.random.default_rng(3)),
+    }
+
+
+def test_write_read_state_roundtrip():
+    tree = _state_tree()
+    back = read_state(write_state(_tmp() / "s.msgpack", tree))
+    assert back["round"] == 7 and back["rng"] == tree["rng"]
+    assert isinstance(back["agg"], tuple) and back["agg"][1] == ()
+    _trees_equal(
+        {k: tree[k] for k in ("params", "agg", "host")},
+        {k: back[k] for k in ("params", "agg", "host")})
+
+
+def test_read_state_refuses_corruption():
+    path = write_state(_tmp() / "s.msgpack", _state_tree())
+    data = bytearray(path.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    path.write_bytes(bytes(data))
+    with pytest.raises(ValueError, match="corrupt"):
+        read_state(path)
+
+
+def test_writer_retention_and_latest():
+    w = CheckpointWriter(_tmp() / "ck", keep=2)
+    for step in (4, 8, 12, 16):
+        w.save(step, {"step": step})
+    assert w.steps() == [12, 16]
+    assert w.latest_step() == 16
+    assert w.load()["step"] == 16
+    assert w.load(12)["step"] == 12
+    # GC removed both payload and sidecar of the dropped steps
+    assert not w.path_for(4).exists()
+    assert not (w.path_for(4).parent / "ckpt_00000004.msgpack.sha256").exists()
+
+
+def test_orphan_payload_is_not_committed():
+    """Commit protocol: a checkpoint exists iff its sidecar exists, so a
+    crash between payload and sidecar rename is a clean no-op."""
+    w = CheckpointWriter(_tmp() / "ck", keep=0)
+    w.save(4, {"step": 4})
+    w.path_for(8).write_bytes(b"torn write")  # payload, no sidecar
+    assert w.steps() == [4]
+    assert w.latest_step() == 4
+
+
+def test_snapshot_isolation_from_host_mutation():
+    """The async writer snapshots host arrays on the caller thread; the
+    trainer mutating them afterwards must not corrupt the checkpoint."""
+    ck = AsyncCheckpointer(_tmp() / "ck", keep=0)
+    host = np.arange(4.0)
+    ck.save(1, {"host": host})
+    host += 100.0  # trainer moves on while the writer serializes
+    ck.wait()
+    np.testing.assert_array_equal(ck.load(1)["host"], np.arange(4.0))
+    ck.close()
+
+
+def test_async_checkpointer_surfaces_writer_errors():
+    ck = AsyncCheckpointer(_tmp() / "ck", keep=0)
+    ck.save(1, {"bad": object()})  # not serializable -> worker-side failure
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        ck.wait()
+    ck.close()
+
+
+def test_async_checkpointer_commit_order_and_drain():
+    ck = AsyncCheckpointer(_tmp() / "ck", keep=3)
+    for step in (2, 4, 6, 8):
+        ck.save(step, {"x": jnp.full((3,), step)})
+    ck.close()  # drains the queue before stopping
+    w = CheckpointWriter(ck.writer.dir, keep=3)
+    assert w.steps() == [4, 6, 8]
+    np.testing.assert_array_equal(w.load(8)["x"], np.full((3,), 8.0))
+
+
+def test_rng_json_roundtrip_continues_stream():
+    rng = np.random.default_rng(11)
+    rng.normal(size=100)
+    back = rng_from_json(rng_state_to_json(rng))
+    np.testing.assert_array_equal(back.normal(size=32), rng.normal(size=32))
+
+
+def test_rng_json_refuses_foreign_bit_generator():
+    s = json.dumps({"bit_generator": "MT19937", "state": {}})
+    with pytest.raises(ValueError, match="MT19937"):
+        rng_from_json(s)
+
+
+# ---------------------------------------------------------------------------
+# 4a. strategy agg_state hooks: every registered strategy round-trips
+# ---------------------------------------------------------------------------
+
+_STRATEGY_NAMES = sorted(strategies.available())
+
+
+def test_strategy_registry_fully_covered():
+    """The parametrized round-trip below covers every registered
+    strategy — a new registration without hook coverage fails here."""
+    assert set(_STRATEGY_NAMES) == {
+        "clustered", "colrel", "fedavg_blind", "fedavg_nonblind",
+        "fedavg_perfect", "memory", "multihop", "quantized",
+    }
+
+
+@pytest.mark.parametrize("name", _STRATEGY_NAMES)
+def test_strategy_agg_state_roundtrip(name):
+    s = strategies.get(name)
+    state = s.init_state(6, 24)
+    # give carried leaves a non-init value so the trip is non-trivial
+    state = jax.tree.map(
+        lambda x: x + 3 if np.issubdtype(np.asarray(x).dtype, np.floating)
+        else x, state)
+    path = write_state(_tmp() / f"{name}.msgpack",
+                       {"agg": s.checkpoint_state(state)})
+    back = s.restore_state(read_state(path)["agg"])
+    assert jax.tree.structure(back) == jax.tree.structure(state)
+    _trees_equal(back, state)
+    for x, y in zip(jax.tree.leaves(back), jax.tree.leaves(state)):
+        assert x.dtype == y.dtype
+
+
+def test_quantized_codec_key_continues_stream():
+    """The quantized strategy's carried PRNG key must continue the
+    dither stream, not restart it."""
+    s = strategies.get("quantized")
+    state = s.init_state(4, 16)
+    key = jax.tree.leaves(state)[0]
+    advanced = jax.tree.map(
+        lambda x: jax.random.split(x)[0] if np.asarray(x).dtype == np.uint32
+        else x, state)
+    back = s.restore_state(read_state(write_state(
+        _tmp() / "q.msgpack", {"agg": s.checkpoint_state(advanced)}))["agg"])
+    with pytest.raises(AssertionError):
+        _trees_equal(back, state)  # advanced, not the init key
+    _trees_equal(back, advanced)
+    del key
+
+
+# ---------------------------------------------------------------------------
+# 4b. channel gate state: restore regenerates the stream bitwise
+# ---------------------------------------------------------------------------
+
+
+def _channel_factories():
+    model = topology.fully_connected(6, 0.4, p_c=0.7, rho=0.6)
+    cmodel = topology.clustered_blocks(6, 0.4, 3, p_intra=0.7, rho=0.6)
+    return {
+        "static": lambda: StaticChannel(model, seed=5, block=4),
+        "markov": lambda: MarkovChannel(gilbert_elliott(model, memory=0.8),
+                                        seed=5, block=4),
+        "clustered_static": lambda: ClusteredStaticChannel(
+            cmodel, seed=5, block=4),
+        "clustered_markov": lambda: ClusteredMarkovChannel(
+            gilbert_elliott_clustered(cmodel, memory=0.8), seed=5, block=4),
+        "mobility": lambda: MobilityChannel(6, epoch=3, seed=5),
+    }
+
+
+@pytest.mark.parametrize("kind", sorted(_channel_factories()))
+@pytest.mark.parametrize("consumed", [5, 8], ids=["mid-block", "block-edge"])
+def test_channel_state_roundtrip_bitwise(kind, consumed):
+    """Serve some rounds, checkpoint (through the full serialization
+    path), restore onto a fresh channel, continue: the stream must be
+    bitwise identical to an uninterrupted one — across block refills."""
+    mk = _channel_factories()[kind]
+    ref = mk()
+    ref_stream = [ref.tau_for_round(r) for r in range(14)]
+
+    a = mk()
+    for r in range(consumed):
+        tu, td = a.tau_for_round(r)
+        np.testing.assert_array_equal(tu, ref_stream[r][0])
+    state = read_state(write_state(_tmp() / "ch.msgpack",
+                                   a.checkpoint_state()))
+    b = mk()
+    b.restore_state(state)
+    for r in range(consumed, 14):
+        tu, td = b.tau_for_round(r)
+        np.testing.assert_array_equal(tu, ref_stream[r][0], err_msg=f"r={r}")
+        np.testing.assert_array_equal(td, ref_stream[r][1], err_msg=f"r={r}")
+
+
+def test_channel_restore_refuses_mismatches():
+    model = topology.fully_connected(6, 0.4, p_c=0.7, rho=0.6)
+    a = StaticChannel(model, seed=5, block=4)
+    a.tau_for_round(0)
+    state = a.checkpoint_state()
+    with pytest.raises(ValueError, match="block size"):
+        StaticChannel(model, seed=5, block=8).restore_state(state)
+    with pytest.raises(ValueError, match="StaticChannel"):
+        MarkovChannel(gilbert_elliott(model, memory=0.8),
+                      seed=5, block=4).restore_state(state)
+
+
+def test_mobility_checkpoint_carries_current_epoch_model():
+    """Mid-epoch, the served LinkModel was derived from positions that no
+    longer exist; the checkpoint must ship it, not re-derive it."""
+    a = MobilityChannel(6, epoch=4, seed=9)
+    for r in range(6):  # into epoch 1
+        a.tau_for_round(r)
+    state = read_state(write_state(_tmp() / "mob.msgpack",
+                                   a.checkpoint_state()))
+    b = MobilityChannel(6, epoch=4, seed=9)
+    b.restore_state(state)
+    ref = a.model_for_round(5)
+    got = b.model_for_round(5)
+    np.testing.assert_array_equal(got.p, ref.p)
+    np.testing.assert_array_equal(got.P, ref.P)
+
+
+# ---------------------------------------------------------------------------
+# 4c. estimator / adaptive schedule
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_roundtrip():
+    rng = np.random.default_rng(0)
+    a = LinkEstimator(5, decay=0.99)
+    for _ in range(30):
+        a.update(rng.integers(0, 2, 5).astype(float),
+                 rng.integers(0, 2, (5, 5)).astype(float))
+    state = read_state(write_state(_tmp() / "est.msgpack",
+                                   a.checkpoint_state()))
+    b = LinkEstimator(5, decay=0.99)
+    b.restore_state(state)
+    assert b.rounds == a.rounds
+    np.testing.assert_array_equal(b.p_hat, a.p_hat)
+    np.testing.assert_array_equal(b.P_hat, a.P_hat)
+    np.testing.assert_array_equal(b.E_hat, a.E_hat)
+    # posterior continues identically
+    tu = rng.integers(0, 2, 5).astype(float)
+    td = rng.integers(0, 2, (5, 5)).astype(float)
+    a.update(tu, td)
+    b.update(tu, td)
+    np.testing.assert_array_equal(b.p_hat, a.p_hat)
+
+
+def test_adaptive_schedule_roundtrip_preserves_cadence():
+    rng = np.random.default_rng(1)
+
+    def feed(sched, r0, rounds):
+        out = []
+        for r in range(r0, r0 + rounds):
+            A = sched.step(r, rng2.integers(0, 2, 4).astype(float),
+                           rng2.integers(0, 2, (4, 4)).astype(float))
+            out.append(None if A is None else np.asarray(A))
+        return out
+
+    cfg = AdaptiveConfig(every=6, warmup=4, sweeps=3, fine_tune_sweeps=3)
+    rng2 = np.random.default_rng(2)
+    ref = AdaptiveWeightSchedule(4, cfg)
+    ref_out = feed(ref, 0, 18)
+
+    rng2 = np.random.default_rng(2)
+    a = AdaptiveWeightSchedule(4, cfg)
+    feed(a, 0, 9)
+    state = read_state(write_state(_tmp() / "sched.msgpack",
+                                   a.checkpoint_state()))
+    b = AdaptiveWeightSchedule(4, cfg)
+    b.restore_state(state)
+    assert b.events == a.events
+    out = feed(b, 9, 9)
+    for got, want in zip(out, ref_out[9:]):
+        assert (got is None) == (want is None)
+        if got is not None:
+            np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# 4d. metrics logger + sinks
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_logger_roundtrip_continues_seq_and_vectors():
+    a = MetricsLogger()
+    a.log_rounds(0, {"loss": np.arange(3.0), "participation": np.ones(3),
+                     "client_participation": np.ones((3, 4))}, k=3)
+    a.log_eval(2, {"acc": 0.5})
+    state = read_state(write_state(_tmp() / "m.msgpack",
+                                   a.checkpoint_state()))
+    b = MetricsLogger()
+    b.restore_state(state)
+    assert b._seq == a._seq
+    assert b.log.loss == a.log.loss
+    assert b.log.rounds == a.log.rounds
+    assert b.log.eval_metrics == a.log.eval_metrics
+    np.testing.assert_array_equal(b.vector("client_participation"),
+                                  a.vector("client_participation"))
+    b.log_rounds(3, {"loss": np.zeros(1)}, k=1)
+    assert b.log.rounds == [0, 1, 2, 3]
+
+
+def test_jsonl_sink_resume_appends():
+    path = _tmp() / "events.jsonl"
+    s1 = JsonlSink(path)
+    s1.emit({"event": "round", "seq": 0, "round": 0})
+    s1.close()
+    s2 = JsonlSink(path, resume=True)
+    s2.emit({"event": "round", "seq": 1, "round": 1})
+    s2.close()
+    events = JsonlSink.load(path)
+    assert [e["seq"] for e in events] == [0, 1]
+    # without resume, the file is truncated (one run per file)
+    JsonlSink(path)
+    assert JsonlSink.load(path) == []
+
+
+def test_csv_sink_resume_trims_post_checkpoint_rows():
+    path = _tmp() / "rounds.csv"
+    s1 = CsvSummarySink(path)
+    for r in range(5):
+        s1.emit({"event": "round", "round": r, "loss": float(r)})
+    s1.close()
+    s2 = CsvSummarySink(path, resume=True)
+    s2.trim_rounds_after(2)  # resumed from a round-3 checkpoint
+    s2.emit({"event": "round", "round": 3, "loss": 30.0})
+    s2.close()
+    rows = path.read_text().splitlines()
+    assert [row.split(",")[0] for row in rows[1:]] == ["0", "1", "2", "3"]
+    assert rows[4].split(",")[1] == "30.0"
+
+
+def test_manifest_records_resumed_from():
+    m = RunManifest.collect({"rounds": 8}, strategy="colrel",
+                            resumed_from="/ck/ckpt_00000004.msgpack")
+    assert m.resumed_from == "/ck/ckpt_00000004.msgpack"
+    assert RunManifest.collect({"rounds": 8}).resumed_from is None
+    p = m.write(_tmp())
+    assert json.loads(p.read_text())["resumed_from"].endswith("4.msgpack")
+
+
+# ---------------------------------------------------------------------------
+# 6. preemption guard
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_guard_latches_and_restores():
+    before = signal.getsignal(signal.SIGTERM)
+    with PreemptionGuard() as guard:
+        assert not guard.triggered
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert guard.triggered
+        assert guard.signum == signal.SIGTERM
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+def test_preemption_guard_sigint():
+    with PreemptionGuard() as guard:
+        os.kill(os.getpid(), signal.SIGINT)
+        assert guard.triggered and guard.signum == signal.SIGINT

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Kill-and-resume smoke: SIGTERM the launcher mid-run, resume, and
+require a bitwise-identical trajectory.
+
+Drives ``repro.launch.train`` three times (n=8, R=32, K=8, telemetry
+on):
+
+1. **reference** — uninterrupted, 32 rounds; its ``rounds.csv`` is the
+   golden trajectory.
+2. **victim** — same config, fresh dirs, checkpointing every chunk
+   (``--ckpt-dir --ckpt-every 8``); SIGTERM is sent after the second
+   chunk line appears on stdout.  The launcher's PreemptionGuard must
+   latch the signal, commit a final checkpoint at the next chunk
+   boundary, print the preemption notice and exit 0.
+3. **resume** — ``--resume`` against the victim's dirs, running to the
+   same 32-round total.
+
+The resumed run's ``rounds.csv`` must equal the reference's byte for
+byte (the CSV sink trims to the checkpoint round on resume, so the
+stream is exactly-once), and the final committed checkpoint must sit at
+round 32.  Exit 0 on success; any deviation is a hard failure.
+
+Usage:  PYTHONPATH=src python tools/kill_resume_smoke.py
+"""
+
+import pathlib
+import signal
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FLAGS = ["--smoke", "--n-clients", "8", "--rounds", "32", "--chunk", "8",
+         "--channel", "markov", "--seed", "0"]
+
+
+def launch(extra, *, kill_after_chunks=None):
+    cmd = [sys.executable, "-m", "repro.launch.train", *FLAGS, *extra]
+    proc = subprocess.Popen(cmd, cwd=REPO, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True, bufsize=1)
+    out, chunks = [], 0
+    for line in proc.stdout:
+        out.append(line)
+        sys.stdout.write("  | " + line)
+        if kill_after_chunks is not None and line.startswith("rounds "):
+            chunks += 1
+            if chunks == kill_after_chunks:
+                proc.send_signal(signal.SIGTERM)
+    proc.wait(timeout=600)
+    return proc.returncode, "".join(out)
+
+
+def fail(msg):
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def main():
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="kill_resume_smoke_"))
+    ref_m, vic_m, ck = tmp / "ref_metrics", tmp / "metrics", tmp / "ckpt"
+
+    print("== reference (uninterrupted) ==")
+    rc, _ = launch(["--metrics-dir", str(ref_m)])
+    if rc != 0:
+        fail(f"reference run exited {rc}")
+
+    print("== victim (SIGTERM after chunk 2) ==")
+    rc, out = launch(["--metrics-dir", str(vic_m), "--ckpt-dir", str(ck),
+                      "--ckpt-every", "8"], kill_after_chunks=2)
+    if rc != 0:
+        fail(f"victim run exited {rc}; preemption must drain and exit clean")
+    if "[ckpt] preempted" not in out:
+        fail("victim run never reported the latched preemption")
+    committed = sorted(p.name for p in ck.glob("*.sha256"))
+    if not committed:
+        fail("victim run committed no checkpoint")
+    print(f"  committed after kill: {committed}")
+
+    print("== resume ==")
+    rc, out = launch(["--metrics-dir", str(vic_m), "--ckpt-dir", str(ck),
+                      "--ckpt-every", "8", "--resume"])
+    if rc != 0:
+        fail(f"resumed run exited {rc}")
+    if "resuming from" not in out:
+        fail("resumed run never reported its checkpoint source")
+    if not (ck / "ckpt_00000032.msgpack.sha256").exists():
+        fail("resumed run did not commit the final round-32 checkpoint")
+
+    ref = (ref_m / "rounds.csv").read_bytes()
+    got = (vic_m / "rounds.csv").read_bytes()
+    if ref != got:
+        fail("resumed rounds.csv differs from the uninterrupted run")
+    n_rows = len(ref.splitlines()) - 1
+    print(f"PASS: {n_rows} rounds bitwise-identical across kill/resume")
+
+
+if __name__ == "__main__":
+    main()
