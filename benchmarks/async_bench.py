@@ -1,0 +1,142 @@
+"""Async vs sync convergence at equal *wall-clock* under bursty blockage.
+
+The sync engine is deadline-free: every round the PS waits out the
+uplink timeout whenever at least one scheduled client is blocked, so
+under a bursty Gilbert-Elliott channel nearly every round costs the
+full timeout.  The async engine (DESIGN.md §13) closes every round at
+the deadline — blocked clients' last updates age in the staging buffer
+and arrive staleness-weighted (``gamma^age``) — so each round costs one
+deadline regardless of blockage.
+
+Wall-clock model (the container has no radio): a sync round costs
+``T_TIMEOUT`` deadline units when any client's uplink is blocked that
+round and 1.0 otherwise; an async round always costs 1.0.  Both engines
+train the strongly-convex quadratic task over the *same* GE trace
+(identical seeds), we charge each run by this clock, and compare losses
+at the same spent budget: the async loss after R rounds (cost R) vs the
+sync loss at the last round whose cumulative cost fits within R.  Tail
+losses are median-smoothed over the last SMOOTH rounds to keep the gate
+robust to the per-round noise injected by the quadratic's stochastic
+linear term.
+
+The gate asserts ``loss_async <= ASYNC_BENCH_MAX_LOSS_RATIO *
+loss_sync`` (default 1.0: async must be at least as converged at equal
+wall-clock).  Emits ``BENCH_async.json`` with both trajectories'
+endpoints, the modeled speedup, and the blockage statistics.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel import MarkovChannel, gilbert_elliott
+from repro.core import optimize_weights, topology
+from repro.data import quadratic_problem
+from repro.data.pipeline import ClientDataset
+from repro.fl import FLTrainer
+
+from .common import Row
+
+N, D = 24, 16
+R, CHUNK = 96, 32
+T_TIMEOUT = 3.0   # sync deadline units burned per round with any blockage
+GAMMA = 0.8       # staleness decay for the async PS
+MEMORY = 0.9      # GE burstiness
+P_UP, P_C = 0.35, 0.4
+SMOOTH = 8        # tail rounds median-smoothed before the comparison
+
+
+def _make_trainer(model, A, channel, *, mode: str, seed: int = 0) -> FLTrainer:
+    from repro.optim import sgd, sgd_momentum
+
+    prob = quadratic_problem(N, D, mu=1.0, L=8.0, hetero=1.0, seed=0)
+    H = jnp.asarray(prob["H"], jnp.float32)
+
+    def loss_fn(params, batch):
+        x = params["x"]
+        d = x - batch["center"][0]
+        return 0.5 * d @ (H @ d) + 0.3 * batch["noise"][0] @ x, {}
+
+    clients = []
+    for i in range(N):
+        c = prob["centers"][i].astype(np.float32)
+        pool = np.random.default_rng(50 + i).normal(size=(256, D)).astype(np.float32)
+        clients.append(ClientDataset({"center": np.tile(c, (256, 1)), "noise": pool},
+                                     batch_size=1, seed=seed + i))
+    kw = dict(async_options={"gamma": GAMMA}) if mode == "async" else {}
+    return FLTrainer(loss_fn, {"x": jnp.zeros(D)}, model, A, clients,
+                     sgd(0.05), sgd_momentum(1.0, beta=0.9), local_steps=2,
+                     strategy="colrel", seed=seed, channel=channel,
+                     mode=mode if mode == "async" else "per_client", **kw)
+
+
+def _tail(losses, upto: int) -> float:
+    """Median of the last SMOOTH entries of losses[:upto]."""
+    w = np.asarray(losses[max(0, upto - SMOOTH):upto], np.float64)
+    return float(np.median(w))
+
+
+def bench_async() -> List[Row]:
+    model = topology.fully_connected(N, P_UP, p_c=P_C, rho=0.5)
+    A = jnp.asarray(optimize_weights(model, sweeps=25, fine_tune_sweeps=25).A,
+                    jnp.float32)
+
+    def channel():
+        return MarkovChannel(gilbert_elliott(model, memory=MEMORY), seed=7,
+                             block=R)
+
+    # the shared GE trace prices the sync rounds: T_TIMEOUT whenever any
+    # uplink is blocked that round, 1.0 otherwise
+    tau_up, _ = channel().trace(0, R)
+    blocked = np.asarray(tau_up, np.float32).min(axis=1) < 0.5
+    sync_cost = np.where(blocked, T_TIMEOUT, 1.0)
+    cum = np.cumsum(sync_cost)
+    budget = float(R)  # async closes R rounds in R deadline units
+    r_sync = int(np.searchsorted(cum, budget, side="right"))
+    assert r_sync >= SMOOTH, (
+        f"degenerate clock: sync completes only {r_sync} rounds in budget "
+        f"{budget:.0f}; lower T_TIMEOUT or raise R")
+
+    t_sync = _make_trainer(model, A, channel(), mode="per_client")
+    t_sync.run(R, chunk=CHUNK)
+    t_async = _make_trainer(model, A, channel(), mode="async")
+    t_async.run(R, chunk=CHUNK)
+
+    loss_sync = _tail(t_sync.log.loss, r_sync)
+    loss_async = _tail(t_async.log.loss, R)
+    speedup = float(R) / float(r_sync)
+
+    ratio_budget = float(os.environ.get("ASYNC_BENCH_MAX_LOSS_RATIO", "1.0"))
+    ratio = loss_async / loss_sync
+    assert ratio <= ratio_budget, (
+        f"async loss {loss_async:.4f} vs sync {loss_sync:.4f} at equal "
+        f"wall-clock (ratio {ratio:.3f} > budget {ratio_budget}): sync got "
+        f"{r_sync}/{R} rounds, blockage {blocked.mean():.0%}")
+
+    with open("BENCH_async.json", "w") as f:
+        json.dump({
+            "n_clients": N,
+            "rounds_async": R,
+            "rounds_sync_at_budget": r_sync,
+            "t_timeout": T_TIMEOUT,
+            "gamma": GAMMA,
+            "ge_memory": MEMORY,
+            "blocked_round_frac": round(float(blocked.mean()), 4),
+            "loss_async": round(loss_async, 6),
+            "loss_sync": round(loss_sync, 6),
+            "loss_ratio": round(ratio, 4),
+            "ratio_budget": ratio_budget,
+            "round_speedup": round(speedup, 3),
+        }, f, indent=1)
+
+    return [
+        (f"async/sync_n{N}_r{r_sync}", 0.0,
+         f"loss={loss_sync:.4f};rounds={r_sync}"),
+        (f"async/async_n{N}_r{R}", 0.0,
+         f"loss={loss_async:.4f};ratio={ratio:.3f};speedup={speedup:.2f}x"),
+    ]

@@ -20,6 +20,7 @@ import traceback
 
 def all_benches():
     from . import (
+        async_bench,
         channel_bench,
         ckpt_bench,
         kernels_bench,
@@ -51,6 +52,7 @@ def all_benches():
         "shard_bench": shard_bench.bench_shard,
         "telemetry": telemetry_bench.bench_telemetry,
         "ckpt": ckpt_bench.bench_ckpt,
+        "async_bench": async_bench.bench_async,
     }
 
 

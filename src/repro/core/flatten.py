@@ -29,7 +29,14 @@ import numpy as np
 
 Params = Any
 
-__all__ = ["FlatSpec", "flat_spec", "ravel", "ravel_stacked", "unravel"]
+__all__ = [
+    "FlatSpec",
+    "flat_spec",
+    "ravel",
+    "ravel_stacked",
+    "unravel",
+    "unravel_stacked",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +100,26 @@ def unravel(spec: FlatSpec, flat: jax.Array, *, dtype: Optional[Any] = None) -> 
         flat = flat.astype(dtype)
     leaves = [
         jax.lax.slice(flat, (o,), (o + s,)).reshape(shape)
+        for o, s, shape in zip(spec.offsets, spec.sizes, spec.shapes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def unravel_stacked(
+    spec: FlatSpec, stack: jax.Array, *, dtype: Optional[Any] = None
+) -> Params:
+    """``(n, d)`` stack -> stacked pytree (leaves ``(n, *shape)``).
+
+    Exact inverse of :func:`ravel_stacked` for a spec built with
+    ``stacked=True`` — column slices are layout-only, so a ravel/unravel
+    round trip at matching dtype is bitwise."""
+    if stack.ndim != 2 or stack.shape[1] != spec.d:
+        raise ValueError(f"stack {stack.shape} != (n, {spec.d})")
+    n = stack.shape[0]
+    if dtype is not None:
+        stack = stack.astype(dtype)
+    leaves = [
+        jax.lax.slice(stack, (0, o), (n, o + s)).reshape((n,) + shape)
         for o, s, shape in zip(spec.offsets, spec.sizes, spec.shapes)
     ]
     return jax.tree.unflatten(spec.treedef, leaves)

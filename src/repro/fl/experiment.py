@@ -106,7 +106,16 @@ class ExperimentSpec:
             passes through.
         copt_sweeps: Gauss–Seidel sweeps for each COPT-alpha phase.
         mode: round execution mode (``"per_client"``,
-            ``"client_sequential"``, ``"weighted_grad"``; DESIGN.md §3).
+            ``"client_sequential"``, ``"weighted_grad"``; DESIGN.md §3)
+            — or ``"async"`` (DESIGN.md §13): wrap the strategy in
+            staleness-weighted opportunistic relaying (the age vector +
+            staging buffer ride the scan carry) and run it through the
+            per_client engine.
+        async_options: :class:`~repro.strategies.AsyncRelayStrategy`
+            knobs for ``mode="async"`` — e.g. ``{"gamma": 0.8,
+            "opportunistic": False}``.  Ignored unless the strategy
+            needs wrapping (pass an ``async_*`` strategy spec to set
+            them directly).
         local_steps: the paper's T (None = model-kind default).
         rounds: default round budget for :meth:`Experiment.run`.
         chunk: rounds per compiled scan chunk (DESIGN.md §9) — ``K > 1``
@@ -169,6 +178,8 @@ class ExperimentSpec:
     alpha: Union[str, np.ndarray] = "auto"
     copt_sweeps: int = 30
     mode: str = "per_client"
+    # AsyncRelayStrategy kwargs for mode="async" (gamma, opportunistic)
+    async_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     local_steps: Optional[int] = None  # None -> model-kind default
     rounds: int = 200
     chunk: int = 1  # rounds per compiled scan chunk (1 = per-round loop)
@@ -440,6 +451,7 @@ def build_experiment(spec: ExperimentSpec) -> Experiment:
     trainer = FLTrainer(
         loss_fn, init_params, init_model, A, clients, client_opt, server_opt,
         local_steps=local_steps, strategy=strategy, mode=spec.mode,
+        async_options=dict(spec.async_options) or None,
         seed=spec.seed, eval_fn=eval_fn, channel=channel,
         adaptive=_adaptive_schedule(spec, n),
         telemetry=telemetry, metrics=metrics_logger, profile=profile,

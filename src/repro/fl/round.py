@@ -338,7 +338,17 @@ def make_scan_round_fn(
     round_fn = make_round_fn(loss_fn, client_opt, server_opt, rc,
                              grad_shardings=grad_shardings,
                              telemetry=telemetry)
+    return _scan_engine(round_fn, channel_sampler, telemetry)
 
+
+def _scan_engine(round_fn, channel_sampler, telemetry):
+    """Wrap a compiled round body in the K-round ``lax.scan`` closures.
+
+    Shared by :func:`make_scan_round_fn` and
+    :func:`make_async_scan_round_fn` — the async carry (age vector +
+    staging buffer) lives inside ``agg_state``, so the scan signatures
+    are identical for both.
+    """
     if channel_sampler is None:
         if telemetry:
 
@@ -421,3 +431,83 @@ def make_scan_round_fn(
         return params, server_state, agg_state, channel_state, rng, metrics
 
     return scan_sampled
+
+
+def make_async_round_fn(
+    loss_fn: Callable,
+    client_opt: Optimizer,
+    server_opt: Optimizer,
+    rc: RoundConfig,
+    grad_shardings: Optional[Params] = None,
+    telemetry: bool = False,
+):
+    """Async execution mode: staleness-weighted opportunistic relaying.
+
+    Same signature and carry structure as :func:`make_round_fn` — the
+    async state (the traced ``(n,)`` int32 age vector and the ``(n, d)``
+    staging buffer, DESIGN.md §13) lives *inside* ``agg_state``, where
+    the strategy's :meth:`~repro.strategies.AsyncRelayStrategy.advance`
+    recurrence updates it every round.  On top of the base metrics the
+    round reports the realized staleness profile:
+
+    * ``mean_age`` / ``max_age`` — the post-delivery age vector's mean
+      and max (rounds since each client's update last reached the PS),
+    * ``stale_frac`` — fraction of clients aggregating a stale update.
+
+    ``rc.aggregation`` must be an async strategy (``async_colrel`` or an
+    :class:`~repro.strategies.AsyncRelayStrategy` wrapping the desired
+    inner scheme); building the async round over a sync strategy is
+    refused rather than silently running sync semantics.
+    """
+    strategy = rc.resolve_strategy()
+    if not getattr(strategy, "is_async", False):
+        raise ValueError(
+            f"make_async_round_fn needs an async strategy (e.g. "
+            f"'async_colrel'), got {strategy.name!r}; wrap it in "
+            f"AsyncRelayStrategy or use FLTrainer(mode='async')"
+        )
+    base = make_round_fn(loss_fn, client_opt, server_opt, rc,
+                         grad_shardings=grad_shardings, telemetry=False)
+
+    def round_fn(params, server_state, agg_state, batches, tau_up, tau_dd, A):
+        params, server_state, agg_state, metrics = base(
+            params, server_state, agg_state, batches, tau_up, tau_dd, A)
+        age = agg_state["age"].astype(jnp.float32)
+        metrics = dict(
+            metrics,
+            mean_age=jnp.mean(age),
+            max_age=jnp.max(age),
+            stale_frac=jnp.mean((age > 0).astype(jnp.float32)),
+        )
+        return params, server_state, agg_state, metrics
+
+    if not telemetry:
+        return round_fn
+    from repro.telemetry.device import instrument_round_fn
+
+    return instrument_round_fn(round_fn, strategy.wire_bits_per_coord)
+
+
+def make_async_scan_round_fn(
+    loss_fn: Callable,
+    client_opt: Optimizer,
+    server_opt: Optimizer,
+    rc: RoundConfig,
+    grad_shardings: Optional[Params] = None,
+    channel_sampler: Optional[Callable] = None,
+    telemetry: bool = False,
+):
+    """Chunked async engine: K staleness-weighted rounds in one scan.
+
+    Identical scan signatures to :func:`make_scan_round_fn` (traced and
+    in-scan-sampled variants, with or without telemetry) — the age
+    vector and staging buffer ride the existing ``agg_state`` slot of
+    the scan carry, so chunking, no-trace sampling, checkpoint/resume
+    and the telemetry streak all compose with async execution for free.
+    The per-round ``mean_age`` / ``max_age`` / ``stale_frac`` metrics
+    come back stacked ``(K,)`` like every other scalar stream.
+    """
+    round_fn = make_async_round_fn(loss_fn, client_opt, server_opt, rc,
+                                   grad_shardings=grad_shardings,
+                                   telemetry=telemetry)
+    return _scan_engine(round_fn, channel_sampler, telemetry)

@@ -61,7 +61,13 @@ from repro.channel.schedule import AdaptiveWeightSchedule
 from repro.core import LinkModel, variance_S
 from repro.core.flatten import flat_spec
 from repro.data.pipeline import ClientDataset, stack_chunk_batches
-from repro.fl.round import RoundConfig, make_round_fn, make_scan_round_fn
+from repro.fl.round import (
+    RoundConfig,
+    make_async_round_fn,
+    make_async_scan_round_fn,
+    make_round_fn,
+    make_scan_round_fn,
+)
 from repro.optim import Optimizer
 from repro.telemetry import (
     CompileTracker,
@@ -126,6 +132,7 @@ class FLTrainer:
         telemetry: bool = False,
         metrics: Optional[MetricsLogger] = None,
         profile: Optional[ProfileWindow] = None,
+        async_options: Optional[Dict[str, Any]] = None,
     ):
         if strategy is not None and aggregation is not None:
             raise ValueError("pass strategy= or aggregation=, not both")
@@ -133,6 +140,26 @@ class FLTrainer:
             aggregation if aggregation is not None else "colrel")
         self.strategy = strategy_registry.resolve(
             spec, fused_kernel=use_fused_kernel)
+        # async execution mode (DESIGN.md §13): wrap the configured
+        # strategy in the staleness-weighted opportunistic-relaying
+        # carrier and run it through the per_client engine — the async
+        # state (age vector + staging buffer) rides ``agg_state``, so
+        # every execution path below works unchanged.
+        if mode == "async":
+            if getattr(self.strategy, "is_async", False):
+                if async_options:
+                    raise ValueError(
+                        "strategy is already async; pass gamma/opportunistic "
+                        "through the strategy spec, not async_options")
+            else:
+                self.strategy = strategy_registry.AsyncRelayStrategy(
+                    inner=self.strategy, **dict(async_options or {}))
+            mode = "per_client"
+        elif async_options:
+            raise ValueError("async_options requires mode='async'")
+        # an async strategy — whether wrapped above or registered directly
+        # (strategy="async_colrel") — runs through the age-carrying builders
+        self.async_mode = getattr(self.strategy, "is_async", False)
         if channel is None:
             if link_model is None:
                 raise ValueError("provide link_model or channel")
@@ -183,7 +210,10 @@ class FLTrainer:
         self._streak = init_streak(n) if self.telemetry else None
         self._log_every = 0
         self._last_tlog = 0
-        self._round_fn = jax.jit(make_round_fn(
+        make_fn = make_async_round_fn if self.async_mode else make_round_fn
+        self._make_scan_fn = (make_async_scan_round_fn if self.async_mode
+                              else make_scan_round_fn)
+        self._round_fn = jax.jit(make_fn(
             loss_fn, client_opt, server_opt, rc, telemetry=self.telemetry))
         self.compiles.register("round_fn", self._round_fn)
         self._scan_fn = None  # built on first chunked run
@@ -389,7 +419,7 @@ class FLTrainer:
                     eval_every: int, verbose: bool) -> None:
         """``n_chunks`` chunks of ``k`` rounds through the scan engine."""
         if self._scan_fn is None:
-            self._scan_fn = jax.jit(make_scan_round_fn(
+            self._scan_fn = jax.jit(self._make_scan_fn(
                 self._loss_fn, self._client_opt, self.server_opt, self.rc,
                 telemetry=self.telemetry))
             self.compiles.register("scan_fn", self._scan_fn)
@@ -453,7 +483,7 @@ class FLTrainer:
         PRNG key thread through the device program instead."""
         if self._sampled_scan_fn is None:
             init_fn, sample_fn = self.channel.scan_sampler()
-            self._sampled_scan_fn = jax.jit(make_scan_round_fn(
+            self._sampled_scan_fn = jax.jit(self._make_scan_fn(
                 self._loss_fn, self._client_opt, self.server_opt, self.rc,
                 channel_sampler=sample_fn, telemetry=self.telemetry))
             self.compiles.register("sampled_scan_fn", self._sampled_scan_fn)

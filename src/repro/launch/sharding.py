@@ -351,9 +351,12 @@ def telemetry_rule(*, scan: bool = False) -> ShardingRule:
 def client_state_shardings(mesh: Mesh, tree: Params, n_fl_clients: int) -> Params:
     """Strategy carried state (replay buffers etc.): any leaf whose leading
     axis is the client population shards it over the client axes — the
-    memory strategy's ``(n, d)`` buffer then lives as per-shard slices
-    next to the update stack instead of n_devices replicas.  Leaves of any
-    other shape (scalars, codec state) replicate."""
+    memory strategy's ``(n, d)`` buffer and the async carry (the ``(n,)``
+    int32 age vector and ``(n, d)`` staging buffer of
+    :class:`~repro.strategies.AsyncRelayStrategy`, DESIGN.md §13) then
+    live as per-shard slices next to the update stack instead of
+    n_devices replicas.  Leaves of any other shape (scalars, codec
+    state) replicate."""
     from repro.launch.mesh import client_axes
 
     ca = client_axes(mesh)

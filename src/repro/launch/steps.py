@@ -38,6 +38,8 @@ from repro.core import flatten
 from repro.fl.round import (
     RoundConfig,
     StrategySpec,
+    make_async_round_fn,
+    make_async_scan_round_fn,
     make_round_fn,
     make_scan_round_fn,
 )
@@ -171,10 +173,15 @@ def build_step(
             unroll=getattr(cfg, "scan_unroll", False),
         )
         psh = shard_rules.param_shardings(cfg, specs["params"], mesh, fsdp=fsdp)
-        make_fn = make_round_fn
+        # async strategies (DESIGN.md §13) lower through the async round
+        # builders: same signatures, agg_state additionally carries the
+        # (n,) age vector + (n, d) staging buffer (client-axis sharded by
+        # client_state_shardings below) and three extra scalar metrics.
+        is_async = getattr(strategy, "is_async", False)
+        make_fn = make_async_round_fn if is_async else make_round_fn
         if scan_rounds:
             K = int(scan_rounds)
-            make_fn = make_scan_round_fn
+            make_fn = make_async_scan_round_fn if is_async else make_scan_round_fn
             # leading K-round axis on the scanned per-round inputs
             SDS = jax.ShapeDtypeStruct
             specs["batches"] = jax.tree.map(
@@ -220,6 +227,9 @@ def build_step(
             "uplink_bits": rep,
             "weight_sum": rep,
         }
+        if is_async:
+            metrics_sh = dict(metrics_sh, mean_age=rep, max_age=rep,
+                              stale_frac=rep)
         out_sh = (psh, ssh, st_sh, metrics_sh)
         lower_args = (
             specs["params"],

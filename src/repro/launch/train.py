@@ -57,7 +57,13 @@ from repro.configs.base import get_arch
 from repro.configs.channels import CHANNEL_PRESETS, make_channel
 from repro.core import optimize_weights, topology
 from repro.core.flatten import flat_spec
-from repro.fl.round import RoundConfig, make_round_fn, make_scan_round_fn
+from repro.fl.round import (
+    RoundConfig,
+    make_async_round_fn,
+    make_async_scan_round_fn,
+    make_round_fn,
+    make_scan_round_fn,
+)
 from repro.models import build, count_params
 from repro.optim import sgd, sgd_momentum
 from repro.telemetry import (
@@ -85,6 +91,13 @@ def main():
                     help="aggregation strategy (repro.strategies registry)")
     ap.add_argument("--fused-kernel", action="store_true",
                     help="flatten-once fused Pallas aggregation (colrel only)")
+    ap.add_argument("--async-mode", action="store_true",
+                    help="asynchronous opportunistic relaying: blocked "
+                         "clients' last updates age in a device staging "
+                         "buffer and the PS applies gamma^age staleness "
+                         "weights (DESIGN.md §13); wraps --aggregation")
+    ap.add_argument("--staleness-gamma", type=float, default=0.9,
+                    help="staleness decay base gamma for --async-mode")
     ap.add_argument("--channel", default="static",
                     choices=sorted(CHANNEL_PRESETS),
                     help="connectivity dynamics preset (repro/configs/channels.py)")
@@ -142,6 +155,17 @@ def main():
         **({"fused": "kernel"} if args.fused_kernel
            else {"fused": "collapse"} if args.aggregation == "colrel" else {}),
     )
+    if args.async_mode:
+        if getattr(strategy, "is_async", False):
+            ap.error(f"--aggregation {args.aggregation} is already "
+                     f"asynchronous; drop --async-mode")
+        strategy = strategy_registry.AsyncRelayStrategy(
+            inner=strategy, gamma=args.staleness_gamma)
+    # async strategies (via --async-mode or --aggregation async_colrel)
+    # route through the age-carrying round builders
+    is_async = getattr(strategy, "is_async", False)
+    mk_round = make_async_round_fn if is_async else make_round_fn
+    mk_scan = make_async_scan_round_fn if is_async else make_scan_round_fn
 
     arch = get_arch(args.arch)
     cfg = arch.smoke() if args.smoke else arch.full()
@@ -330,8 +354,8 @@ def main():
         return batches
 
     if args.chunk == 1:
-        round_fn = jax.jit(make_round_fn(bundle.loss_fn, sgd(0.25), server_opt,
-                                         rc, telemetry=telemetry))
+        round_fn = jax.jit(mk_round(bundle.loss_fn, sgd(0.25), server_opt,
+                                    rc, telemetry=telemetry))
         done = r_start
         for r in range(r_start, args.rounds):
             if profile is not None:
@@ -350,9 +374,11 @@ def main():
                 params, sstate, agg_state, metrics = round_fn(*fn_args)
             jax.block_until_ready(metrics["loss"])
             tick(r, 1, metrics)
+            stale = (f"stale={float(metrics['stale_frac']):.2f}  "
+                     if "stale_frac" in metrics else "")
             print(f"round {r:3d}  loss={float(metrics['loss']):.4f}  "
                   f"participants={int(metrics['participation'])}/{n}  "
-                  f"|delta|={float(metrics['delta_norm']):.3f}  "
+                  f"|delta|={float(metrics['delta_norm']):.3f}  {stale}"
                   f"({time.perf_counter() - t0:.2f}s)")
             done = r + 1
             if boundary(done):
@@ -371,7 +397,7 @@ def main():
             ap.error(f"--no-trace needs a channel with scan_sampler() "
                      f"(--channel {args.channel} cannot sample in-scan)")
         init_fn, sample_fn = channel.scan_sampler()
-        scan_fn = jax.jit(make_scan_round_fn(
+        scan_fn = jax.jit(mk_scan(
             bundle.loss_fn, sgd(0.25), server_opt, rc,
             channel_sampler=sample_fn, telemetry=telemetry))
         ch_rng, sub = jax.random.split(jax.random.PRNGKey(args.seed))
@@ -381,9 +407,9 @@ def main():
             ch_state = jax.tree.map(jnp.asarray, nt["state"])
             ch_rng = jnp.asarray(nt["rng"])
     else:
-        scan_fn = jax.jit(make_scan_round_fn(bundle.loss_fn, sgd(0.25),
-                                             server_opt, rc,
-                                             telemetry=telemetry))
+        scan_fn = jax.jit(mk_scan(bundle.loss_fn, sgd(0.25),
+                                  server_opt, rc,
+                                  telemetry=telemetry))
     done = r_start
     for c in range(r_start // K, args.rounds // K):
         r0 = c * K

@@ -34,6 +34,7 @@ from repro.strategies.classic import (
     FedAvgNonBlind,
     FedAvgPerfect,
 )
+from repro.strategies.async_relay import AsyncRelayStrategy, delivered_mask
 from repro.strategies.clustered import ClusteredColRelStrategy
 from repro.strategies.multihop import MultiHopStrategy, multihop_correction
 from repro.strategies.memory import MemoryStrategy
@@ -48,6 +49,8 @@ __all__ = [
     "register",
     "register_deprecated_alias",
     "resolve",
+    "AsyncRelayStrategy",
+    "delivered_mask",
     "ColRelStrategy",
     "ClusteredColRelStrategy",
     "FedAvgBlind",

@@ -1,0 +1,198 @@
+"""Asynchronous opportunistic relaying: staleness-weighted aggregation
+over a device-resident staging buffer.
+
+The paper's rounds are synchronous: a client whose uplink is blocked
+simply contributes nothing that round.  Real mmWave fleets instead keep
+training through blockage bursts — the PS aggregates each client's
+*last delivered* update, down-weighted by how stale it is (FedDec,
+PAPERS.md 2306.06715), and a stale client's fresh update still gets out
+when the channel puts it next to a connected peer (opportunistic
+relaying, 2206.04742).
+
+``AsyncRelayStrategy`` wraps an arbitrary inner
+:class:`~repro.strategies.base.AggregationStrategy` (``colrel`` by
+default) and carries two extra pieces of state through the compiled
+round — both ride the existing ``agg_state`` slot of the
+``lax.scan`` carry, so every execution mode (per-round / chunked /
+no-trace / sharded) and the checkpoint/resume + telemetry machinery
+work unchanged:
+
+* ``age``     — traced ``(n,)`` int32: rounds since each client's update
+  last reached the PS.  Resets to 0 on delivery, increments otherwise —
+  the same recurrence as the telemetry outage streak.
+* ``staging`` — ``(n, d)`` f32: each client's last-delivered flat
+  update, aging in place on device.
+
+**Delivery.**  Client ``i``'s fresh update reaches the PS this round iff
+its own uplink is up (``tau_up[i]``) or — when ``opportunistic`` — some
+peer ``j`` that heard ``i``'s D2D broadcast (``tau_dd[i, j]``, the
+mixing-matrix orientation of ``core/relay.py``) has *its* uplink up and
+relays on ``i``'s behalf.  Clustered ``(C, m, m)`` block taus take the
+intra-cluster form of the same max.
+
+**Staleness weighting.**  The PS always aggregates a full ``(n, d)``
+stack (every client has *some* staged update), scaled by the normalized
+decay ``gamma**age``: client ``i``'s multiplier is
+``n * gamma**age_i / sum_j gamma**age_j``, so the total effective mass
+stays ``n`` and the inner scheme sees full participation
+(``tau_up = 1``).  With zero blockage every age is 0, every multiplier
+is exactly ``1.0f``, and the round is **bitwise identical** to the sync
+inner strategy (pinned in ``tests/test_property.py``).
+
+**Relaying.**  The staged stack is re-relayed through the inner scheme's
+own mixing algebra against the *current* ``tau_dd`` draw each round, so
+COPT-alpha weights keep applying to whatever the PS is about to sum.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatten
+from repro.strategies import registry
+from repro.strategies.base import AggregationStrategy, ExecutionContext, State
+
+__all__ = ["AsyncRelayStrategy", "delivered_mask"]
+
+
+def delivered_mask(tau_up: jax.Array, tau_dd: jax.Array,
+                   *, opportunistic: bool = True) -> jax.Array:
+    """(n,) f32 indicator: whose *fresh* update reaches the PS this round.
+
+    ``tau_dd[i, j]`` follows the ``core/relay.py`` mixing convention —
+    client ``i``'s D2D broadcast reached peer ``j`` — so peer ``j`` can
+    relay ``i``'s update exactly when ``tau_dd[i, j] * tau_up[j]``.
+    Block ``(C, m, m)`` taus use the intra-cluster form.
+    """
+    t = tau_up.astype(jnp.float32)
+    if not opportunistic:
+        return t
+    dd = tau_dd.astype(jnp.float32)
+    if tau_dd.ndim == 3:  # clustered block form
+        C, m = tau_dd.shape[0], tau_dd.shape[1]
+        tb = t.reshape(C, m)
+        relayed = jnp.max(dd * tb[:, None, :], axis=2).reshape(-1)
+    else:
+        relayed = jnp.max(dd * t[None, :], axis=1)
+    return jnp.maximum(t, relayed)
+
+
+class AsyncRelayStrategy(AggregationStrategy):
+    """Staleness-weighted async aggregation around an inner scheme."""
+
+    name = "async_colrel"
+    scalar_collapsible = False  # the staged stack must materialize
+    stateful = True             # {"age", "staging", "inner"}
+    #: marks the async family for the round/trainer plumbing (duck-typed
+    #: so fl/round.py never imports this module)
+    is_async = True
+
+    def __init__(self, inner="colrel", gamma: float = 0.9,
+                 opportunistic: bool = True, inner_options=None):
+        self.inner = registry.resolve(inner, **dict(inner_options or {}))
+        if getattr(self.inner, "is_async", False):
+            raise ValueError("async strategies do not nest")
+        if not 0.0 < float(gamma) <= 1.0:
+            raise ValueError(f"gamma must be in (0, 1], got {gamma!r}")
+        self.gamma = float(gamma)
+        self.opportunistic = bool(opportunistic)
+        # proxy the inner scheme's connectivity contract (instance
+        # attributes shadow the class defaults)
+        self.needs_A = self.inner.needs_A
+        self.name = f"async_{self.inner.name}"
+
+    @property
+    def calibration_tracks_A(self) -> bool:
+        return self.inner.calibration_tracks_A
+
+    def calibrate(self, model, A) -> "AsyncRelayStrategy":
+        inner = self.inner.calibrate(model, A)
+        if inner is self.inner:
+            return self
+        return AsyncRelayStrategy(inner=inner, gamma=self.gamma,
+                                  opportunistic=self.opportunistic)
+
+    def wire_bits_per_coord(self, d: int) -> float:
+        return self.inner.wire_bits_per_coord(d)
+
+    # -- state -----------------------------------------------------------
+    def init_state(self, n: int, d: int) -> State:
+        return {
+            "age": jnp.zeros((n,), jnp.int32),
+            "staging": jnp.zeros((n, d), jnp.float32),
+            "inner": self.inner.init_state(n, d),
+        }
+
+    def checkpoint_state(self, state: State):
+        return {
+            "age": state["age"],
+            "staging": state["staging"],
+            "inner": self.inner.checkpoint_state(state["inner"]),
+        }
+
+    def restore_state(self, tree) -> State:
+        return {
+            "age": jnp.asarray(tree["age"], jnp.int32),
+            "staging": jnp.asarray(tree["staging"], jnp.float32),
+            "inner": self.inner.restore_state(tree["inner"]),
+        }
+
+    # -- the async carry --------------------------------------------------
+    def advance(self, age, staging, stack, tau_up, tau_dd):
+        """One step of the carry recurrence: ``(delivered, age', staging')``.
+
+        Delivered clients refresh their staged update and reset to age 0;
+        blocked clients keep aging in place.
+        """
+        deliv = delivered_mask(tau_up, tau_dd, opportunistic=self.opportunistic)
+        age = jnp.where(deliv > 0, 0, age + 1).astype(jnp.int32)
+        staging = jnp.where(deliv[:, None] > 0, stack.astype(staging.dtype),
+                            staging)
+        return deliv, age, staging
+
+    def staleness_weights(self, age: jax.Array) -> jax.Array:
+        """Normalized decay ``gamma**age / sum gamma**age`` (sums to 1)."""
+        s = jnp.power(jnp.float32(self.gamma), age.astype(jnp.float32))
+        return s / jnp.sum(s)
+
+    def _effective(self, age, staging):
+        """Staleness-weighted staged stack with total mass ``n`` (so the
+        multiplier is exactly ``1.0f`` per client at age 0)."""
+        n = staging.shape[0]
+        s = jnp.power(jnp.float32(self.gamma), age.astype(jnp.float32))
+        scale = jnp.float32(n) / jnp.sum(s)
+        return (s * scale)[:, None] * staging
+
+    # -- aggregation ------------------------------------------------------
+    def aggregate(self, updates, tau_up, tau_dd, A, state: State):
+        deliv, age, staging = self.advance(
+            state["age"], state["staging"], updates, tau_up, tau_dd)
+        del deliv
+        eff = self._effective(age, staging)
+        delta, inner_state = self.inner.aggregate(
+            eff, jnp.ones_like(tau_up), tau_dd, A, state["inner"])
+        return delta, {"age": age, "staging": staging, "inner": inner_state}
+
+    def aggregate_tree(self, deltas, tau_up, tau_dd, A, state,
+                       ctx: ExecutionContext):
+        # flatten once into the staging layout, advance the carry, then
+        # hand the re-stacked effective tree to the inner scheme so its
+        # own execution path (faithful / fused / blocked) still applies.
+        spec = flatten.flat_spec(deltas, stacked=True)
+        stack = flatten.ravel_stacked(deltas, dtype=ctx.flat_dtype)
+        deliv, age, staging = self.advance(
+            state["age"], state["staging"], stack, tau_up, tau_dd)
+        del deliv
+        eff = self._effective(age, staging)
+        eff_tree = flatten.unravel_stacked(spec, eff, dtype=jnp.float32)
+        gdelta, inner_state = self.inner.aggregate_tree(
+            eff_tree, jnp.ones_like(tau_up), tau_dd, A, state["inner"], ctx)
+        return gdelta, {"age": age, "staging": staging, "inner": inner_state}
+
+    def __repr__(self) -> str:
+        return (f"AsyncRelayStrategy(inner={self.inner.name!r}, "
+                f"gamma={self.gamma!r}, opportunistic={self.opportunistic!r})")
+
+
+registry.register("async_colrel", AsyncRelayStrategy)

@@ -76,6 +76,11 @@ class AggregationStrategy:
     scalar_collapsible: bool = False
     #: whether the scheme carries state across rounds
     stateful: bool = False
+    #: contract checked by the conformance harness: after ``calibrate``
+    #: against the fixture link stats, ``E[sum_j weights_j] = 1``
+    #: (Eq. (5)).  Blind FedAvg declares False — its participation bias
+    #: is the paper's motivating failure, not a bug.
+    unbiased_weight_sum: bool = True
 
     @property
     def calibration_tracks_A(self) -> bool:

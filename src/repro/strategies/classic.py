@@ -126,6 +126,7 @@ class FedAvgBlind(AggregationStrategy):
 
     name = "fedavg_blind"
     scalar_collapsible = True
+    unbiased_weight_sum = False  # E[sum w] = mean(p) < 1 by design
 
     def weights(self, tau_up, tau_dd, A):
         return tau_up.astype(jnp.float32) / tau_up.shape[0]

@@ -52,6 +52,12 @@ SCALAR_STREAMS = {
     "weight_sum": "weight_sums",
     "weight_drift": None,
     "delta_norm": None,
+    # async execution mode (DESIGN.md §13): realized staleness profile.
+    # Event-only — the TrainLog facade stays bitwise-identical for sync
+    # runs and async runs read these off the round events.
+    "mean_age": None,
+    "max_age": None,
+    "stale_frac": None,
 }
 
 

@@ -1,0 +1,113 @@
+"""Hypothesis front-end for the property tests, with a seeded fallback.
+
+When the real ``hypothesis`` package is importable it is used directly,
+with two profiles registered here so CI is reproducible:
+
+* ``ci``  — ``derandomize=True`` (the example stream is derived from the
+  test's source, no ambient entropy), loaded when ``CI`` is set;
+* ``dev`` — ``deadline=None`` (jit compilation blows any wall-clock
+  deadline), loaded otherwise.
+
+When hypothesis is absent (this container ships without it), a minimal
+deterministic stand-in provides the same surface the tests use —
+``given`` / ``settings`` / ``st.integers`` / ``st.floats`` /
+``st.booleans`` / ``st.sampled_from`` / ``st.composite`` — drawing
+``max_examples`` examples from a ``numpy`` generator seeded from the
+test's qualified name, so runs are reproducible and the suite reports
+the same pass/fail either way (no skips).
+"""
+
+from __future__ import annotations
+
+import os
+import zlib
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+    for _name, _kw in (("ci", dict(derandomize=True, deadline=None)),
+                       ("dev", dict(deadline=None))):
+        settings.register_profile(_name, **_kw)
+    settings.load_profile("ci" if os.environ.get("CI") else "dev")
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        """The slice of ``hypothesis.strategies`` the tests draw from."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kw):
+                def draw_fn(rng):
+                    return fn(lambda s: s.example(rng), *args, **kw)
+
+                return _Strategy(draw_fn)
+
+            return build
+
+    st = _St()
+
+    def settings(**kw):
+        """Records ``max_examples`` on the (already-``given``-wrapped)
+        test; every other knob is a no-op here."""
+
+        def deco(fn):
+            fn._max_examples = kw.get("max_examples", 10)
+            return fn
+
+        return deco
+
+    def given(*strategies_):
+        def deco(fn):
+            # no functools.wraps: __wrapped__ would make pytest inspect
+            # the original signature and demand fixtures for the params
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 10)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = np.random.default_rng((base, i))
+                    args = [s.example(rng) for s in strategies_]
+                    try:
+                        fn(*args)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example #{i} (seed ({base}, {i})): "
+                            f"{args!r}") from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

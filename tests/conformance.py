@@ -1,0 +1,164 @@
+"""Cross-strategy conformance harness (DESIGN.md §13).
+
+One fixture, one assertion vocabulary, a matrix derived from the *live*
+strategy registry times the execution engines — so a newly registered
+strategy automatically inherits kill/resume bitwise continuation,
+jit-cache stability, and the weight-sum unbiasedness contract with zero
+new test code.  ``tests/test_conformance.py`` parametrizes over
+:func:`matrix`; this module holds the shared machinery.
+
+Execution modes cover every engine the trainer exposes:
+
+* ``per_round`` — the host loop (``chunk=1``);
+* ``chunked``   — the compiled multi-round scan (``chunk=3``);
+* ``no_trace``  — connectivity drawn inside the scan (no tau tensors on
+  host);
+* ``async``     — the staleness-weighted asynchronous engine wrapping
+  the strategy (age vector + staging buffer riding ``agg_state``).
+
+The weight-sum contract (paper Eq. (5)): after host-side calibration
+against the fixture link statistics, a strategy with
+``unbiased_weight_sum`` and a scalar collapse must satisfy
+``E[sum_j weights_j] = 1`` under the channel's stationary law — checked
+by Monte Carlo over a bulk trace.  Strategies without a scalar collapse
+(``weights() is None``) must instead log ``weight_sum = NaN`` every
+round, never a silently wrong number.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import strategies
+from repro.channel import (
+    ClusteredMarkovChannel,
+    MarkovChannel,
+    gilbert_elliott,
+    gilbert_elliott_clustered,
+)
+from repro.core import optimize_weights, topology
+from repro.core.weights import optimize_weights_clustered
+from repro.data.pipeline import ClientDataset
+from repro.fl import FLTrainer
+from repro.optim import sgd, sgd_momentum
+
+N, D = 6, 12
+
+#: name -> (FLTrainer mode, run() kwargs).  ``chunk=3`` over 6 rounds
+#: crosses a chunk boundary; the channel block size (4) additionally
+#: crosses a buffer refill, so resume exercises mid-block regeneration.
+EXECUTION_MODES = {
+    "per_round": ("per_client", dict(chunk=1)),
+    "chunked": ("per_client", dict(chunk=3)),
+    "no_trace": ("per_client", dict(chunk=3, no_trace=True)),
+    "async": ("async", dict(chunk=3)),
+}
+
+
+def strategy_names():
+    return sorted(strategies.available())
+
+
+def matrix():
+    """(strategy, mode) grid — every registered strategy through every
+    execution engine."""
+    return [(s, m) for s in strategy_names() for m in EXECUTION_MODES]
+
+
+@functools.lru_cache(maxsize=None)
+def _fixture(strategy: str):
+    """(link model, alpha) for a strategy: the clustered scheme gets the
+    block topology with block-COPT weights; everything else the dense
+    fully-connected model with COPT-alpha (unbiased by construction)."""
+    if strategy == "clustered":
+        model = topology.clustered_blocks(N, 0.5, 3, p_intra=0.8, rho=0.6)
+        A = optimize_weights_clustered(model, sweeps=5, fine_tune_sweeps=5).Ab
+    else:
+        model = topology.fully_connected(N, 0.5, p_c=0.8, rho=1.0)
+        A = optimize_weights(model, sweeps=5, fine_tune_sweeps=5).A
+    return model, np.asarray(A)
+
+
+def _channel(strategy: str, model, *, seed=5, block=4):
+    if strategy == "clustered":
+        return ClusteredMarkovChannel(
+            gilbert_elliott_clustered(model, memory=0.8), seed=seed, block=block)
+    return MarkovChannel(gilbert_elliott(model, memory=0.8), seed=seed,
+                         block=block)
+
+
+def make_trainer(strategy: str, mode: str = "per_round", *, telemetry=False,
+                 seed=3) -> FLTrainer:
+    """The tiny least-squares fixture from the resume golden tests,
+    generalized over the execution-mode axis."""
+    rng = np.random.default_rng(0)
+    targets = rng.normal(size=(N, D)).astype(np.float32)
+    clients = [ClientDataset({"t": np.repeat(targets[i][None], 64, 0)},
+                             batch_size=4, seed=i) for i in range(N)]
+    model, A = _fixture(strategy)
+
+    def loss_fn(p, batch):
+        r = p["x"] - batch["t"]
+        return jnp.mean(r * r), None
+
+    fl_mode, _ = EXECUTION_MODES[mode]
+    return FLTrainer(loss_fn, {"x": jnp.zeros((D,), jnp.float32)}, model, A,
+                     clients, sgd(0.3), sgd_momentum(1.0, beta=0.9),
+                     local_steps=2, strategy=strategy, seed=seed,
+                     channel=_channel(strategy, model), mode=fl_mode,
+                     telemetry=telemetry)
+
+
+def run_kwargs(mode: str) -> dict:
+    return dict(EXECUTION_MODES[mode][1])
+
+
+def compiled_fn(trainer: FLTrainer, mode: str):
+    """The jitted entry point a given execution mode runs through, for
+    cache-stability assertions."""
+    if mode == "per_round":
+        return trainer._round_fn
+    if mode == "no_trace":
+        return trainer._sampled_scan_fn
+    return trainer._scan_fn
+
+
+def assert_same_run(a: FLTrainer, b: FLTrainer) -> None:
+    """Bitwise-identical trajectories and final state (NaN-aware for the
+    weight-sum stream)."""
+    for field in ("rounds", "loss", "participation", "uplink_bits",
+                  "weight_sums"):
+        av, bv = getattr(a.log, field), getattr(b.log, field)
+        assert len(av) == len(bv), field
+        for x, y in zip(av, bv):
+            assert x == y or (np.isnan(x) and np.isnan(y)), (field, x, y)
+    for name, ta, tb in (("params", a.params, b.params),
+                        ("server_state", a.server_state, b.server_state),
+                        ("agg_state", a.agg_state, b.agg_state)):
+        la, lb = jax.tree.leaves(ta), jax.tree.leaves(tb)
+        assert len(la) == len(lb), name
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=name)
+
+
+def mc_weight_sum(strategy: str, *, rounds: int = 4096) -> float:
+    """Monte-Carlo ``E[sum_j weights_j]`` for a calibrated strategy over
+    the fixture channel's stationary law; NaN when the strategy has no
+    scalar collapse."""
+    model, A = _fixture(strategy)
+    s = strategies.get(strategy).calibrate(model, A)
+    Aj = jnp.asarray(A, jnp.float32)
+    tau_up, tau_dd = _channel(strategy, model, block=rounds).trace(0, rounds)
+    w0 = s.weights(jnp.asarray(tau_up[0], jnp.float32),
+                   jnp.asarray(tau_dd[0], jnp.float32), Aj)
+    if w0 is None:
+        return float("nan")
+    sums = jax.jit(jax.vmap(
+        lambda tu, td: jnp.sum(s.weights(tu, td, Aj))))(
+        jnp.asarray(tau_up, jnp.float32), jnp.asarray(tau_dd, jnp.float32))
+    return float(jnp.mean(sums))

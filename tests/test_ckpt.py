@@ -251,8 +251,9 @@ def test_strategy_registry_fully_covered():
     """The parametrized round-trip below covers every registered
     strategy — a new registration without hook coverage fails here."""
     assert set(_STRATEGY_NAMES) == {
-        "clustered", "colrel", "fedavg_blind", "fedavg_nonblind",
-        "fedavg_perfect", "memory", "multihop", "quantized",
+        "async_colrel", "clustered", "colrel", "fedavg_blind",
+        "fedavg_nonblind", "fedavg_perfect", "memory", "multihop",
+        "quantized",
     }
 
 

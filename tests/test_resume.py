@@ -1,14 +1,11 @@
-"""The resume protocol: kill at round r, restore, continue *bitwise*.
+"""The resume protocol beyond the conformance matrix.
 
-The golden matrix runs every registered strategy through all three
-execution engines — the per-round host loop, the chunked scan engine,
-and the no-trace in-scan-sampled variant — and asserts the resumed
-trajectory (losses, participation, uplink bits, weight sums, final
-params / server state / agg state) is indistinguishable from an
-uninterrupted run.  On top of that: directory-based periodic
-checkpointing, telemetry-streak and adaptive-schedule resume,
-jit-stability (a restore must not trigger recompilation), the
-experiment-layer wiring (spec fields, sink append mode, manifest
+The golden kill/restore/continue-*bitwise* matrix (every registered
+strategy x every execution engine, including jit-cache stability across
+the restore) lives in ``test_conformance.py`` now.  This file keeps the
+protocol pieces the matrix does not parametrize: directory-based
+periodic checkpointing, telemetry-streak and adaptive-schedule resume,
+the experiment-layer wiring (spec fields, sink append mode, manifest
 provenance), config-mismatch refusal, and the launcher's flag
 validation.
 """
@@ -24,7 +21,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import strategies
 from repro.channel import (
     AdaptiveConfig,
     AdaptiveWeightSchedule,
@@ -93,32 +89,7 @@ def _assert_same_run(a, b):
 
 
 # ---------------------------------------------------------------------------
-# 1. the golden matrix: every strategy x every execution engine
-# ---------------------------------------------------------------------------
-
-MODES = [("per_round", 1, False), ("chunked", 3, False), ("no_trace", 3, True)]
-
-
-@pytest.mark.parametrize("strategy", sorted(strategies.available()))
-@pytest.mark.parametrize("mode,chunk,no_trace", MODES,
-                         ids=[m[0] for m in MODES])
-def test_kill_resume_bitwise(strategy, mode, chunk, no_trace, tmp_path):
-    ref = _make_trainer(strategy)
-    ref.run(6, chunk=chunk, no_trace=no_trace)
-
-    t1 = _make_trainer(strategy)
-    t1.run(3, chunk=chunk, no_trace=no_trace)
-    path = t1.save_checkpoint(tmp_path / "c.msgpack")
-
-    t2 = _make_trainer(strategy)
-    # resume semantics: `rounds` is the TOTAL target, not an increment
-    t2.run(6, chunk=chunk, no_trace=no_trace, resume_from=path)
-    assert t2.round == 6
-    _assert_same_run(ref, t2)
-
-
-# ---------------------------------------------------------------------------
-# 2. directory-based periodic checkpointing + resume-from-latest
+# 1. directory-based periodic checkpointing + resume-from-latest
 # ---------------------------------------------------------------------------
 
 
@@ -156,7 +127,7 @@ def test_misaligned_cadence_is_an_error(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# 3. telemetry + adaptive state across a resume
+# 2. telemetry + adaptive state across a resume
 # ---------------------------------------------------------------------------
 
 
@@ -199,29 +170,7 @@ def test_adaptive_schedule_resumes_bitwise(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# 4. jit stability: a restore must not trigger recompilation
-# ---------------------------------------------------------------------------
-
-
-def test_resume_does_not_recompile(tmp_path):
-    t1 = _make_trainer()
-    t1.run(3, chunk=3)
-    path = t1.save_checkpoint(tmp_path / "c.msgpack")
-
-    t2 = _make_trainer()
-    t2.run(6, chunk=3, resume_from=path)
-    assert t2._scan_fn._cache_size() == 1
-
-    t3 = _make_trainer()
-    t3.run(2)
-    p2 = t3.save_checkpoint(tmp_path / "c2.msgpack")
-    t4 = _make_trainer()
-    t4.run(4, resume_from=p2)
-    assert t4._round_fn._cache_size() == 1
-
-
-# ---------------------------------------------------------------------------
-# 5. experiment-layer wiring: spec fields, sinks, manifest
+# 3. experiment-layer wiring: spec fields, sinks, manifest
 # ---------------------------------------------------------------------------
 
 
@@ -259,7 +208,7 @@ def test_experiment_resume_with_metrics(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# 6. mismatched configurations refuse to restore
+# 4. mismatched configurations refuse to restore
 # ---------------------------------------------------------------------------
 
 
@@ -295,7 +244,7 @@ def test_restore_refuses_mismatches(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# 7. launcher flag validation (clear errors, not silent fallback)
+# 5. launcher flag validation (clear errors, not silent fallback)
 # ---------------------------------------------------------------------------
 
 

@@ -208,7 +208,12 @@ def test_every_registered_strategy_is_scan_covered():
                "multihop", "memory", "quantized",
                # clustered: C=1 scan trajectories pinned bitwise against
                # colrel's golden fixture in tests/test_clustered.py
-               "clustered"}
+               "clustered",
+               # async_colrel: the async scan's chunked/no-trace/resume
+               # trajectories are pinned for every mode by the conformance
+               # matrix (tests/test_conformance.py), and zero-blockage
+               # bitwise sync reduction by tests/test_property.py
+               "async_colrel"}
     assert set(strategies.available()) <= covered
 
 
