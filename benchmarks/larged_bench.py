@@ -1,0 +1,251 @@
+"""Large-d relaying engine benchmark + memory-roofline gate (DESIGN.md §14).
+
+Measures the segmented zero-copy aggregation engine against the seed
+path at transformer-scale flat dimensions.  Both paths compute the same
+ColRel collapse ``(1/n) tau_up @ ((A * tau_dd^T) @ stack)``; they differ
+in how the ``(n, d)`` client-update stack exists:
+
+* **seed** — the pre-§14 pipeline: ``jnp.concatenate`` flatten (one
+  extra full-stack copy), then the monolithic fused pass over the
+  assembled ``(n, d)`` buffer.
+* **engine** — segmented streaming: per-leaf ``(n, d_i)`` segments feed
+  the collapsed weight row directly (``ravel_stacked_segments`` +
+  ``row_stream``); no ``(n, d)`` buffer is ever materialized.
+
+Two gates, both recorded in ``BENCH_largeD.json`` and enforced here:
+
+1. **memory roofline** — the engine's peak live bytes, from the
+   compiled executable's ``memory_analysis()`` (arguments + outputs +
+   temps - donation aliasing), must stay within
+   ``LARGED_BENCH_MAX_PEAK_RATIO`` (default 1.7) of the single-stack
+   floor ``n * d * 4``.  The seed path cannot meet this — the concat
+   temp alone adds a full extra stack.
+2. **throughput** — the engine must aggregate at
+   ``LARGED_BENCH_MIN_SPEEDUP`` (default 1.5) times the seed path's
+   rounds/sec at the largest swept ``d`` (the regime is
+   bandwidth-bound: dropping the concat round-trip removes two of the
+   three full-stack memory passes).
+
+A third, ungated record — ``max_abs_diff`` — pins the two paths to the
+same answer (the reduction is over ``n`` per column, so per-leaf
+streaming reassociates nothing).
+
+``LARGED_BENCH_MAX_D`` caps the sweep for CI smoke runs (the full sweep
+tops out at d = 10^7: a 320 MB stack at n = 8).  A donation section
+additionally lowers the trainer's round function with and without
+``donate_argnums`` and records the aliased bytes XLA reclaims.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatten
+from repro.kernels import ops as kernel_ops
+
+from .common import Row
+
+N = 8
+FULL_SWEEP = (100_000, 1_000_000, 10_000_000)
+FLOOR_DTYPE_BYTES = 4  # the f32 stack the memory gate is priced against
+
+
+def _shapes_for(d: int) -> list:
+    """Transformer-shard-shaped leaves summing to exactly ``d``: a block
+    of square attention projections, a pair of 1:4 MLP rectangles, thin
+    norm/bias vectors, and an odd-sized remainder leaf so the segmented
+    path always sees an unaligned tail."""
+    h = max(int(np.sqrt(d / 14.0)), 4)
+    shapes = []
+    total = 0
+    for shape in [(h, h)] * 4 + [(h, 4 * h), (4 * h, h)] + [(h,)] * 2:
+        size = int(np.prod(shape))
+        if total + size > d - 1:
+            break
+        shapes.append(shape)
+        total += size
+    shapes.append((d - total,))  # remainder: prime-ish, never tile-aligned
+    return shapes
+
+
+def _make_deltas(d: int, seed: int = 0):
+    """Client-stacked update tree: leaves ``(N, *shape)``, f32."""
+    rng = np.random.default_rng(seed)
+    return {
+        f"leaf{i}": jnp.asarray(
+            rng.normal(size=(N, *shape)).astype(np.float32))
+        for i, shape in enumerate(_shapes_for(d))
+    }
+
+
+def _make_channel(seed: int = 1):
+    rng = np.random.default_rng(seed)
+    tau_up = jnp.asarray((rng.random(N) < 0.7).astype(np.float32))
+    tau_dd = jnp.asarray((rng.random((N, N)) < 0.8).astype(np.float32))
+    A = jnp.asarray(rng.dirichlet(np.ones(N), size=N).T.astype(np.float32))
+    return tau_up, tau_dd, A
+
+
+def _seed_fn(spec):
+    """The pre-§14 pipeline: concat flatten + monolithic fused pass."""
+
+    def fn(deltas, tau_up, tau_dd, A):
+        stack = flatten.ravel_stacked_concat(deltas, dtype=jnp.float32)
+        gflat = kernel_ops.fused_aggregate(A, tau_up, tau_dd, stack)
+        return flatten.unravel(spec, gflat, dtype=jnp.float32)
+
+    return fn
+
+
+def _engine_fn(spec):
+    """Segment streaming: per-leaf segments against the collapsed row."""
+
+    def fn(deltas, tau_up, tau_dd, A):
+        w = kernel_ops.collapsed_weight_row(A, tau_up, tau_dd)
+        segments = flatten.ravel_stacked_segments(deltas, dtype=jnp.float32)
+        leaves = [kernel_ops.row_stream(w, seg).reshape(shape)
+                  for seg, shape in zip(segments, spec.shapes)]
+        return jax.tree.unflatten(spec.treedef, leaves)
+
+    return fn
+
+
+def peak_bytes(compiled) -> int:
+    """Peak live bytes of a compiled executable: arguments + outputs +
+    temps, minus what donation aliasing reclaims."""
+    m = compiled.memory_analysis()
+    return int(m.argument_size_in_bytes + m.output_size_in_bytes
+               + m.temp_size_in_bytes - m.alias_size_in_bytes)
+
+
+def _time_calls(fn, args, *, min_calls: int = 3, min_s: float = 0.5) -> float:
+    """Median-free steady-state rate: calls/sec over >= min_s of work."""
+    jax.block_until_ready(fn(*args))  # warm (compile excluded)
+    calls, t0 = 0, time.perf_counter()
+    while True:
+        jax.block_until_ready(fn(*args))
+        calls += 1
+        dt = time.perf_counter() - t0
+        if calls >= min_calls and dt >= min_s:
+            return calls / dt
+
+
+def _donation_record(d: int = 50_000) -> dict:
+    """Lower the trainer's actual round function with and without the
+    carry donation and record the aliased bytes XLA reclaims."""
+    from repro import strategies
+    from repro.fl.round import RoundConfig, make_round_fn
+    from repro.optim import sgd, sgd_momentum
+
+    rng = np.random.default_rng(7)
+    params = {"x": jnp.zeros((d,), jnp.float32)}
+    targets = jnp.asarray(rng.normal(size=(N, 1, 4, d)).astype(np.float32))
+
+    def loss_fn(p, batch):
+        r = p["x"] - batch["t"]
+        return jnp.mean(r * r), None
+
+    rc = RoundConfig(n_clients=N, local_steps=1, mode="per_client",
+                     aggregation=strategies.get("colrel", fused="kernel"),
+                     segment_d=1)
+    fn = make_round_fn(loss_fn, sgd(0.3), sgd_momentum(1.0, beta=0.9), rc)
+    server_state = sgd_momentum(1.0, beta=0.9).init(params)
+    agg_state = rc.aggregation.init_state(N, d)
+    tau_up, tau_dd, A = _make_channel()
+    args = (params, server_state, agg_state, {"t": targets},
+            tau_up, tau_dd, A)
+    plain = jax.jit(fn).lower(*args).compile()
+    donated = jax.jit(fn, donate_argnums=(0, 1, 2)).lower(*args).compile()
+    aliased = int(donated.memory_analysis().alias_size_in_bytes)
+    assert aliased > 0, "donated round reclaimed no buffers"
+    return {
+        "d": d,
+        "peak_bytes_plain": peak_bytes(plain),
+        "peak_bytes_donated": peak_bytes(donated),
+        "alias_bytes": aliased,
+    }
+
+
+def bench_larged() -> List[Row]:
+    max_d = int(os.environ.get("LARGED_BENCH_MAX_D", str(FULL_SWEEP[-1])))
+    ds = [d for d in FULL_SWEEP if d <= max_d] or [max_d]
+    max_ratio = float(os.environ.get("LARGED_BENCH_MAX_PEAK_RATIO", "1.7"))
+    min_speedup = float(os.environ.get("LARGED_BENCH_MIN_SPEEDUP", "1.5"))
+
+    rows: List[Row] = []
+    sweep = []
+    for d in ds:
+        deltas = _make_deltas(d)
+        spec = flatten.flat_spec(deltas, stacked=True)
+        assert spec.d == d, (spec.d, d)
+        tau_up, tau_dd, A = _make_channel()
+        args = (deltas, tau_up, tau_dd, A)
+
+        seed_c = jax.jit(_seed_fn(spec)).lower(*args).compile()
+        engine_c = jax.jit(_engine_fn(spec)).lower(*args).compile()
+
+        a = jax.tree.leaves(seed_c(*args))
+        b = jax.tree.leaves(engine_c(*args))
+        diff = max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(a, b))
+        scale = max(float(jnp.max(jnp.abs(x))) for x in a)
+        assert diff <= 1e-5 * max(scale, 1.0), (
+            f"engine disagrees with seed at d={d}: {diff} vs scale {scale}")
+
+        floor = N * d * FLOOR_DTYPE_BYTES
+        peak_seed = peak_bytes(seed_c)
+        peak_engine = peak_bytes(engine_c)
+        rps_seed = _time_calls(seed_c, args)
+        rps_engine = _time_calls(engine_c, args)
+        rec = {
+            "d": d,
+            "floor_bytes": floor,
+            "peak_bytes_seed": peak_seed,
+            "peak_bytes_engine": peak_engine,
+            "peak_ratio_seed": round(peak_seed / floor, 3),
+            "peak_ratio_engine": round(peak_engine / floor, 3),
+            "rounds_per_sec_seed": round(rps_seed, 2),
+            "rounds_per_sec_engine": round(rps_engine, 2),
+            "speedup": round(rps_engine / rps_seed, 2),
+            "max_abs_diff": diff,
+        }
+        sweep.append(rec)
+        rows.append((
+            f"larged/d{d}", 1e6 / rps_engine,
+            f"speedup={rec['speedup']}x;peak_ratio={rec['peak_ratio_engine']}"
+            f";seed_ratio={rec['peak_ratio_seed']}",
+        ))
+
+    last = sweep[-1]
+    assert last["peak_ratio_engine"] <= max_ratio, (
+        f"engine peak {last['peak_ratio_engine']}x floor exceeds the "
+        f"{max_ratio}x memory-roofline gate at d={last['d']}")
+    assert last["speedup"] >= min_speedup, (
+        f"engine speedup {last['speedup']}x < {min_speedup}x gate at "
+        f"d={last['d']}")
+
+    donation = _donation_record()
+    rows.append((
+        "larged/donation", 0.0,
+        f"alias_bytes={donation['alias_bytes']};"
+        f"peak={donation['peak_bytes_donated']}/{donation['peak_bytes_plain']}",
+    ))
+
+    with open("BENCH_largeD.json", "w") as f:
+        json.dump({
+            "n_clients": N,
+            "floor_dtype_bytes": FLOOR_DTYPE_BYTES,
+            "gates": {"max_peak_ratio": max_ratio,
+                      "min_speedup": min_speedup},
+            "gates_checked_at_d": last["d"],
+            "sweep": sweep,
+            "donation": donation,
+        }, f, indent=1)
+
+    return rows

@@ -1,10 +1,19 @@
-"""Summarize the dry-run JSON records into the §Roofline table."""
+"""Summarize the dry-run JSON records into the §Roofline table.
+
+Each row also reports the *achieved* HBM bytes/s the roofline model
+implies for that step — HLO bytes over the modeled step time — as a
+fraction of the v5e HBM ceiling (819 GB/s): a memory-bound step pins
+the fraction at ~1.0 by construction, while compute- or
+collective-bound steps show how much bandwidth headroom remains.
+"""
 
 from __future__ import annotations
 
 import json
 from pathlib import Path
 from typing import List
+
+from repro.launch.roofline import HBM_BW
 
 from .common import Row
 
@@ -32,11 +41,16 @@ def bench_dryrun_roofline() -> List[Row]:
         return [("roofline/none", 0.0, "run repro.launch.dryrun first")]
     for r in recs:
         t = r["roofline"]
+        step_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        # achieved HBM bandwidth under the roofline step time, as a
+        # fraction of the 819 GB/s ceiling
+        achieved = (r["hlo_bytes_per_chip"] / step_s) if step_s else 0.0
         rows.append((
             f"roofline/{r['arch']}/{r['shape']}",
-            max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+            step_s * 1e6,
             f"bottleneck={t['bottleneck'].replace('_s','')};"
             f"c={t['compute_s']:.3f};m={t['memory_s']:.3f};x={t['collective_s']:.3f};"
+            f"bw={achieved / 1e9:.0f}GBps({achieved / HBM_BW:.2f});"
             f"useful={r['useful_flop_ratio'] and round(r['useful_flop_ratio'],3)}",
         ))
     n_multi = len(load_records(mesh="2x16x16"))

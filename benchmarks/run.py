@@ -24,6 +24,7 @@ def all_benches():
         channel_bench,
         ckpt_bench,
         kernels_bench,
+        larged_bench,
         paper_figures,
         quant_bench,
         roofline_report,
@@ -53,6 +54,7 @@ def all_benches():
         "telemetry": telemetry_bench.bench_telemetry,
         "ckpt": ckpt_bench.bench_ckpt,
         "async_bench": async_bench.bench_async,
+        "larged": larged_bench.bench_larged,
     }
 
 

@@ -78,17 +78,29 @@ def _shard_bounds(index, shape) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
     return tuple(start), tuple(stop)
 
 
-def snapshot(tree: Any) -> Any:
+def snapshot(tree: Any, *, copy_arrays: bool = False) -> Any:
     """Copy-free capture of a state pytree: jax arrays become
-    :class:`_ArraySnap` shard references, host state is deep-copied."""
+    :class:`_ArraySnap` shard references, host state is deep-copied.
+
+    ``copy_arrays=True`` takes a *device-side* copy of every jax array
+    first (an async dispatch — no host sync) and references the copy's
+    shards instead.  Required when the caller donates its carry buffers
+    back into the next compiled step (DESIGN.md §14): donation deletes
+    the original buffers while the writer thread may still be pulling
+    them to host, so the snapshot must own its own storage.  The copies
+    overlap the next step's compute exactly like the shard transfers do.
+    """
     if type(tree) in ckpt_io._SCALARS:
         return tree
     if isinstance(tree, dict):
-        return {k: snapshot(v) for k, v in tree.items()}
+        return {k: snapshot(v, copy_arrays=copy_arrays)
+                for k, v in tree.items()}
     if isinstance(tree, (list, tuple)):
-        t = [snapshot(v) for v in tree]
+        t = [snapshot(v, copy_arrays=copy_arrays) for v in tree]
         return t if isinstance(tree, list) else tuple(t)
     if isinstance(tree, jax.Array):
+        if copy_arrays:
+            tree = jax.numpy.copy(tree)
         shards = [(*_shard_bounds(s.index, tree.shape), s.data)
                   for s in tree.addressable_shards]
         return _ArraySnap(str(tree.dtype), tuple(tree.shape), shards)
@@ -238,8 +250,11 @@ class AsyncCheckpointer:
     drains and stops the worker.  Saves commit in submission order.
     """
 
-    def __init__(self, directory, keep: int = 3):
+    def __init__(self, directory, keep: int = 3, *, copy_arrays: bool = False):
         self.writer = CheckpointWriter(directory, keep=keep)
+        #: snapshot with device-side copies — required when the caller
+        #: donates its carry buffers into the next step (see snapshot())
+        self.copy_arrays = bool(copy_arrays)
         self._q: "queue.Queue" = queue.Queue()
         self._error: Optional[BaseException] = None
         self._worker = threading.Thread(
@@ -278,7 +293,7 @@ class AsyncCheckpointer:
         self._raise_pending()
         if not self._worker.is_alive():
             raise RuntimeError("AsyncCheckpointer is closed")
-        self._q.put((int(step), snapshot(tree)))
+        self._q.put((int(step), snapshot(tree, copy_arrays=self.copy_arrays)))
 
     def wait(self) -> None:
         """Block until every queued save has committed."""

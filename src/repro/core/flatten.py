@@ -9,10 +9,24 @@ ravels the whole per-client update pytree into a single contiguous
 the fused aggregation kernel exactly once, and unravels the resulting
 ``(d,)`` PS delta back to the model pytree.
 
-The ravel is layout-only work (reshape + one concatenate into the
-contiguous buffer); the unravel is ``d`` slices.  Both are O(n*d) bytes —
-the same traffic a single leaf-wise pass would pay — and everything in
-between touches the stack once.
+Two ravel executions (DESIGN.md §14):
+
+* **Segmented fill** (:func:`ravel` / :func:`ravel_stacked`) — the
+  ``(n, d)`` buffer is pre-allocated once and filled leaf-by-leaf with
+  ``dynamic_update_slice``.  Each write is the single consumer of the
+  previous buffer value, so XLA updates it in place: the stack is
+  materialized exactly once, and any dtype cast happens *per leaf inside
+  the fill* (fused into the slice write) instead of materializing a
+  second full-size casted copy first.
+* **Segment streaming** (:func:`ravel_stacked_segments`) — at large d
+  the stack itself is the memory bottleneck; this returns the per-leaf
+  ``(n, d_i)`` column segments (reshape + cast only, no buffer at all)
+  so the fused kernels can consume leaf buffers directly and the
+  monolithic stack never exists.
+
+:func:`ravel_stacked_concat` keeps the pre-segmentation ``concatenate``
+implementation as the oracle/baseline (bitwise-identical values) for
+``benchmarks/larged_bench.py`` and the segmented-path tests.
 
 ``FlatSpec`` is hashable static metadata (leaf shapes + treedef), so the
 same spec can key jit caches and be rebuilt for free under tracing.
@@ -21,7 +35,7 @@ same spec can key jit caches and be rebuilt for free under tracing.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +48,8 @@ __all__ = [
     "flat_spec",
     "ravel",
     "ravel_stacked",
+    "ravel_stacked_concat",
+    "ravel_stacked_segments",
     "unravel",
     "unravel_stacked",
 ]
@@ -69,27 +85,78 @@ def flat_spec(tree: Params, *, stacked: bool = False) -> FlatSpec:
     return FlatSpec(treedef, shapes)
 
 
+def _cast(part: jax.Array, dtype) -> jax.Array:
+    # per-leaf cast, fused into the segment write by XLA — never a full
+    # (n, d) casted intermediate
+    return part if dtype is None else part.astype(dtype)
+
+
 def ravel(tree: Params, *, dtype=None) -> jax.Array:
-    """Pytree -> contiguous (d,) buffer (leaf order = jax.tree.flatten)."""
+    """Pytree -> contiguous (d,) buffer (leaf order = jax.tree.flatten).
+
+    Segmented fill: the output buffer is allocated once and each leaf is
+    written into its column range with ``dynamic_update_slice`` (cast
+    folded per leaf), so the flat buffer is materialized exactly once.
+    """
     leaves = jax.tree.leaves(tree)
-    parts = [leaf.reshape(-1) for leaf in leaves]
-    if dtype is not None:
-        parts = [p.astype(dtype) for p in parts]
-    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    if len(leaves) == 1:
+        return _cast(leaves[0].reshape(-1), dtype)
+    parts = [_cast(leaf.reshape(-1), dtype) for leaf in leaves]
+    out_dtype = parts[0].dtype
+    d = sum(p.shape[0] for p in parts)
+    out = jnp.zeros((d,), out_dtype)
+    offset = 0
+    for p in parts:
+        out = jax.lax.dynamic_update_slice(out, p, (offset,))
+        offset += p.shape[0]
+    return out
 
 
 def ravel_stacked(tree: Params, *, dtype=None) -> jax.Array:
     """Stacked pytree (leaves ``(n, *shape)``) -> contiguous ``(n, d)``.
 
     This is the flatten-*once* step of the fused aggregation engine: the
-    only materialization of the round's update stack.
+    only materialization of the round's update stack — a segmented
+    ``dynamic_update_slice`` fill of one pre-allocated buffer, with any
+    dtype cast folded into each leaf's write.
     """
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    if len(leaves) == 1:
+        return _cast(leaves[0].reshape(n, -1), dtype)
+    parts = [_cast(leaf.reshape(n, -1), dtype) for leaf in leaves]
+    out_dtype = parts[0].dtype
+    d = sum(p.shape[1] for p in parts)
+    out = jnp.zeros((n, d), out_dtype)
+    offset = 0
+    for p in parts:
+        out = jax.lax.dynamic_update_slice(out, p, (0, offset))
+        offset += p.shape[1]
+    return out
+
+
+def ravel_stacked_concat(tree: Params, *, dtype=None) -> jax.Array:
+    """The pre-segmentation ``concatenate`` ravel (seed path), kept as the
+    oracle/baseline: same values bit-for-bit as :func:`ravel_stacked`, but
+    the full-size casted parts materialize before the concat — the extra
+    copy ``benchmarks/larged_bench.py`` measures against."""
     leaves = jax.tree.leaves(tree)
     n = leaves[0].shape[0]
     parts = [leaf.reshape(n, -1) for leaf in leaves]
     if dtype is not None:
         parts = [p.astype(dtype) for p in parts]
     return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def ravel_stacked_segments(tree: Params, *, dtype=None) -> List[jax.Array]:
+    """Stacked pytree -> per-leaf ``(n, d_i)`` column segments, in spec
+    order.  Layout-only (reshape + per-leaf cast); the monolithic stack is
+    never built — ``jnp.concatenate(segments, axis=1)`` would reproduce
+    :func:`ravel_stacked` bitwise.  This is what the segment-streaming
+    kernel paths (DESIGN.md §14) consume."""
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    return [_cast(leaf.reshape(n, -1), dtype) for leaf in leaves]
 
 
 def unravel(spec: FlatSpec, flat: jax.Array, *, dtype: Optional[Any] = None) -> Params:

@@ -183,6 +183,11 @@ class ExperimentSpec:
     local_steps: Optional[int] = None  # None -> model-kind default
     rounds: int = 200
     chunk: int = 1  # rounds per compiled scan chunk (1 = per-round loop)
+    # -- large-d engine (DESIGN.md §14) --------------------------------
+    # d threshold for segment-streaming aggregation (0 = monolithic
+    # stack); carry-buffer donation keeps one live (n, d) generation
+    segment_d: int = 0
+    donate: bool = True
     # -- channel -------------------------------------------------------
     channel: str = "static"  # preset name (repro/configs/channels.py)
     adaptive: bool = False   # online link estimation + periodic re-opt
@@ -452,6 +457,7 @@ def build_experiment(spec: ExperimentSpec) -> Experiment:
         loss_fn, init_params, init_model, A, clients, client_opt, server_opt,
         local_steps=local_steps, strategy=strategy, mode=spec.mode,
         async_options=dict(spec.async_options) or None,
+        donate=spec.donate, segment_d=spec.segment_d,
         seed=spec.seed, eval_fn=eval_fn, channel=channel,
         adaptive=_adaptive_schedule(spec, n),
         telemetry=telemetry, metrics=metrics_logger, profile=profile,

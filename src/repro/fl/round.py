@@ -78,6 +78,11 @@ class RoundConfig:
     flat_dtype: str = "float32"
     # d-axis tile of the fused kernel's grid
     fused_block_d: int = 2048
+    # flat-dim threshold for segment-streaming aggregation (DESIGN.md
+    # §14): at d >= segment_d the kernel-fused strategies stream per-leaf
+    # (n, d_i) segments instead of materializing the monolithic (n, d)
+    # stack; 0 keeps the monolithic path (the golden-pinned default).
+    segment_d: int = 0
 
     def __post_init__(self):
         # fail at construction, not first trace; canonical_name does not
@@ -101,6 +106,7 @@ class RoundConfig:
             flat_dtype=jnp.dtype(self.flat_dtype),
             fused_block_d=self.fused_block_d,
             spmd_axes=self.spmd_axes,
+            segment_d=self.segment_d,
         )
 
 

@@ -133,6 +133,8 @@ class FLTrainer:
         metrics: Optional[MetricsLogger] = None,
         profile: Optional[ProfileWindow] = None,
         async_options: Optional[Dict[str, Any]] = None,
+        donate: bool = True,
+        segment_d: int = 0,
     ):
         if strategy is not None and aggregation is not None:
             raise ValueError("pass strategy= or aggregation=, not both")
@@ -185,11 +187,21 @@ class FLTrainer:
         self.link_model = link_model if link_model is not None else channel.model_for_round(0)
         self.A = jnp.asarray(A, jnp.float32)
         self.clients = list(clients)
+        # Buffer donation (DESIGN.md §14): the compiled round/scan carry
+        # (params, server_state, agg_state, plus the sampled-scan channel
+        # state / rng and the telemetry streak) is donated back into each
+        # call, so XLA aliases the outputs onto the input buffers instead
+        # of allocating a second copy of every carry array.  The caller's
+        # init_params must then be defensively copied — donation would
+        # delete the caller's own buffers on the first round.
+        self.donate = bool(donate)
+        if self.donate:
+            init_params = jax.tree.map(jnp.array, init_params)
         self.params = init_params
         self.eval_fn = eval_fn
         rc = RoundConfig(
             n_clients=n, local_steps=local_steps, mode=mode,
-            aggregation=self.strategy,
+            aggregation=self.strategy, segment_d=int(segment_d),
         )
         self.rc = rc
         self._loss_fn = loss_fn
@@ -213,8 +225,17 @@ class FLTrainer:
         make_fn = make_async_round_fn if self.async_mode else make_round_fn
         self._make_scan_fn = (make_async_scan_round_fn if self.async_mode
                               else make_scan_round_fn)
+        # donated argnums per signature: the carry slots only — never
+        # batches (host-built each call), taus, or A (reused across calls)
+        self._donate_round = ()
+        self._donate_sampled = ()
+        if self.donate:
+            streak = (7,) if self.telemetry else ()
+            self._donate_round = (0, 1, 2) + streak
+            self._donate_sampled = (0, 1, 2, 4, 5) + streak
         self._round_fn = jax.jit(make_fn(
-            loss_fn, client_opt, server_opt, rc, telemetry=self.telemetry))
+            loss_fn, client_opt, server_opt, rc, telemetry=self.telemetry),
+            donate_argnums=self._donate_round)
         self.compiles.register("round_fn", self._round_fn)
         self._scan_fn = None  # built on first chunked run
         self._seed = seed
@@ -421,7 +442,8 @@ class FLTrainer:
         if self._scan_fn is None:
             self._scan_fn = jax.jit(self._make_scan_fn(
                 self._loss_fn, self._client_opt, self.server_opt, self.rc,
-                telemetry=self.telemetry))
+                telemetry=self.telemetry),
+                donate_argnums=self._donate_round)
             self.compiles.register("scan_fn", self._scan_fn)
         batches = self._stack_batches(k)
         for c in range(n_chunks):
@@ -485,7 +507,8 @@ class FLTrainer:
             init_fn, sample_fn = self.channel.scan_sampler()
             self._sampled_scan_fn = jax.jit(self._make_scan_fn(
                 self._loss_fn, self._client_opt, self.server_opt, self.rc,
-                channel_sampler=sample_fn, telemetry=self.telemetry))
+                channel_sampler=sample_fn, telemetry=self.telemetry),
+                donate_argnums=self._donate_sampled)
             self.compiles.register("sampled_scan_fn", self._sampled_scan_fn)
             self._sampled_init_fn = init_fn
         # state init is guarded separately from fn build: a restored run
@@ -589,7 +612,8 @@ class FLTrainer:
                     f"chunk size {k}: the chunked engine only reaches the "
                     "host at chunk boundaries")
             from repro.ckpt.writer import AsyncCheckpointer
-            self._ckpt = AsyncCheckpointer(ckpt_dir, keep=ckpt_keep)
+            self._ckpt = AsyncCheckpointer(ckpt_dir, keep=ckpt_keep,
+                                           copy_arrays=self.donate)
             self._ckpt_last = -1
         self._log_every = int(log_every)
         self._last_tlog = start

@@ -23,6 +23,13 @@ garbage, but every output column is a function of its own input column
 only, and Pallas masks out-of-range writes, so the garbage never lands.
 bf16 updates are supported (fp32 accumulation via preferred_element_type);
 the output is always fp32.
+
+``row_stream_pallas`` is the segment-streaming twin (DESIGN.md §14): the
+collapsed weight row is computed **once per round** by the caller and
+each per-leaf ``(n, d_i)`` segment streams through independently — the
+monolithic ``(n, d)`` stack never materializes.  Every output column is
+a function of its own input column only, so the per-segment outputs are
+exactly the corresponding column ranges of the monolithic pass.
 """
 
 from __future__ import annotations
@@ -82,4 +89,45 @@ def fused_aggregate_pallas(
         out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
         interpret=interpret,
     )(a, tdt, tu, updates)
+    return out.reshape(d)
+
+
+def _row_stream_kernel(w_ref, x_ref, o_ref):
+    # The weight row arrives precomputed (carried across segments); each
+    # grid step streams its (n, block_d) tile straight to (1, block_d).
+    o_ref[...] = jax.lax.dot(
+        w_ref[...], x_ref[...].astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST, preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def row_stream_pallas(
+    w: jax.Array,        # (n,) f32 collapsed weight row (caller computes once)
+    segment: jax.Array,  # (n, d_i) one leaf's update segment, f32/bf16/int8
+    *,
+    block_d: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """Segment-streaming delta: ``w @ segment`` with fp32 accumulation.
+
+    Returns the ``(d_i,)`` fp32 partial delta for this segment — the
+    columns the monolithic :func:`fused_aggregate_pallas` would have
+    produced for the same leaf, without ever building the (n, d) stack.
+    """
+    n, d = segment.shape
+    wr = w.astype(jnp.float32).reshape(1, n)
+    bd = min(block_d, d)
+
+    out = pl.pallas_call(
+        _row_stream_kernel,
+        grid=(pl.cdiv(d, bd),),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),   # weight row pinned
+            pl.BlockSpec((n, bd), lambda i: (0, i)),  # the streamed segment
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(wr, segment)
     return out.reshape(d)

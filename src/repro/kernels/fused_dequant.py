@@ -28,6 +28,13 @@ The per-leaf / dense dequant path (``codec.decode`` then the inner
 strategy's aggregation) is the correctness oracle —
 ``tests/test_wire.py`` and ``benchmarks/quant_bench.py`` assert
 agreement within fp32 contraction-order tolerance.
+
+``dequant_row_stream_pallas`` is the segment-streaming twin
+(DESIGN.md §14): the caller folds the per-client scales (and bias
+correction) into the collapsed weight row once with
+:func:`fold_dequant_scales`, then streams each per-leaf int8 segment
+independently — neither the monolithic int8 stack nor any f32 stack
+ever materializes.
 """
 
 from __future__ import annotations
@@ -95,3 +102,25 @@ def fused_dequant_aggregate_pallas(
         interpret=interpret,
     )(a, tdt, tu, s, q)
     return out.reshape(d)
+
+
+def fold_dequant_scales(w: jax.Array, scale: jax.Array) -> jax.Array:
+    """Fold the per-client dequant scales into a collapsed weight row:
+    ``(w * scale)`` with everything flattened to ``(n,)`` f32.  The same
+    fold the monolithic kernel performs in VMEM, hoisted out so the
+    segment-streaming path pays it once per round instead of per tile."""
+    return w.astype(jnp.float32).reshape(-1) * scale.astype(jnp.float32).reshape(-1)
+
+
+def dequant_row_stream_pallas(ws: jax.Array, q_segment: jax.Array, *,
+                              block_d: int = 2048,
+                              interpret: bool = False) -> jax.Array:
+    """Stream one int8 segment against the scale-folded weight row.
+
+    ``ws @ q_segment`` with fp32 accumulation — the int8 columns cross
+    HBM once and the dequantized f32 form never exists.  Delegates to
+    ``row_stream_pallas`` (the kernel upcasts the tile in VMEM)."""
+    from repro.kernels.fused_aggregate import row_stream_pallas
+
+    return row_stream_pallas(ws, q_segment, block_d=block_d,
+                             interpret=interpret)

@@ -26,6 +26,13 @@ input column and Pallas masks out-of-range writes.
 
 ``MemoryStrategy.aggregate`` (pure jnp, same contraction order) is the
 correctness oracle — asserted in ``tests/test_wire.py``.
+
+``memory_stream_pallas`` is the segment-streaming twin (DESIGN.md §14):
+the realized mixing mask ``A * tau_dd^T`` is computed **once per round**
+by the caller and each per-leaf ``(n, d_i)`` segment of the update stack
+and the replay buffer streams through independently — the monolithic
+``(n, d)`` stack never materializes, and the caller writes each
+``contrib`` segment back into the (donated) replay buffer in place.
 """
 
 from __future__ import annotations
@@ -91,4 +98,56 @@ def fused_memory_update_pallas(
         ),
         interpret=interpret,
     )(a, tdt, tcol, updates, buffer)
+    return delta.reshape(d), contrib
+
+
+def _memory_stream_kernel(mix_ref, tau_col_ref, x_ref, buf_ref,
+                          delta_ref, contrib_ref, *, inv_n):
+    # The realized mask arrives precomputed (carried across segments).
+    tilde = jax.lax.dot(
+        mix_ref[...], x_ref[...].astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST, preferred_element_type=jnp.float32,
+    )
+    t = tau_col_ref[...]  # (n, 1) uplink selector
+    contrib = t * tilde + (1.0 - t) * buf_ref[...].astype(jnp.float32)
+    contrib_ref[...] = contrib
+    delta_ref[...] = jnp.sum(contrib, axis=0, keepdims=True) * inv_n
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def memory_stream_pallas(
+    mix: jax.Array,      # (n, n) f32 realized mask A * tau_dd^T (caller-computed)
+    tau_up: jax.Array,   # (n,)  uplink arrival indicators
+    segment: jax.Array,  # (n, d_i) one leaf's update segment, f32 or bf16
+    buf_seg: jax.Array,  # (n, d_i) matching replay-buffer columns, f32
+    *,
+    block_d: int = 2048,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Segment-streaming memory round: ``(delta_seg (d_i,), contrib_seg
+    (n, d_i))`` — the columns :func:`fused_memory_update_pallas` would
+    produce for this leaf, without the monolithic stack."""
+    n, d = segment.shape
+    tcol = tau_up.astype(jnp.float32).reshape(n, 1)
+    bd = min(block_d, d)
+
+    delta, contrib = pl.pallas_call(
+        functools.partial(_memory_stream_kernel, inv_n=1.0 / n),
+        grid=(pl.cdiv(d, bd),),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),   # realized mask pinned
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),   # uplink selector pinned
+            pl.BlockSpec((n, bd), lambda i: (0, i)),  # streamed segment
+            pl.BlockSpec((n, bd), lambda i: (0, i)),  # streamed buffer columns
+        ],
+        out_specs=(
+            pl.BlockSpec((1, bd), lambda i: (0, i)),
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ),
+        interpret=interpret,
+    )(mix.astype(jnp.float32), tcol, segment, buf_seg)
     return delta.reshape(d), contrib

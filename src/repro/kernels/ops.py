@@ -13,10 +13,14 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_pallas
-from .fused_aggregate import fused_aggregate_pallas
+from .fused_aggregate import fused_aggregate_pallas, row_stream_pallas
 from .fused_dequant import fused_dequant_aggregate_pallas
-from .fused_memory import fused_memory_update_pallas
-from .relay_block import block_fused_aggregate_pallas, block_relay_mix_pallas
+from .fused_memory import fused_memory_update_pallas, memory_stream_pallas
+from .relay_block import (
+    block_fused_aggregate_pallas,
+    block_relay_mix_pallas,
+    block_row_stream_pallas,
+)
 from .relay_mix import relay_mix_pallas
 from .ssd_scan import ssd_scan_pallas
 
@@ -117,6 +121,92 @@ def fused_memory_update(A: jax.Array, tau_up: jax.Array, tau_dd: jax.Array,
         return delta, contrib
     return fused_memory_update_pallas(A, tau_up, tau_dd, updates, buffer,
                                       block_d=block_d)
+
+
+# -- segment streaming (DESIGN.md §14) -----------------------------------
+#
+# At large d the (n, d) stack itself is the memory bottleneck, so the
+# collapsed per-round operands (weight row / realized mask) are computed
+# once here and each per-leaf (n, d_i) segment streams through its own
+# kernel pass — the monolithic stack never materializes.  The interpret
+# paths mirror the monolithic interpret expressions exactly: every output
+# column is a function of its own input column only, so per-segment
+# outputs equal the corresponding columns of the monolithic pass bitwise.
+
+
+def mixing_mask(A: jax.Array, tau_dd: jax.Array) -> jax.Array:
+    """Realized mixing mask ``A * tau_dd^T`` (n, n) f32 — the monolithic
+    kernels recompute it in VMEM per tile; the segment-streaming paths
+    hoist it to once per round (O(n^2), free next to the stream)."""
+    return A.astype(jnp.float32) * tau_dd.astype(jnp.float32).T
+
+
+def collapsed_weight_row(A: jax.Array, tau_up: jax.Array,
+                         tau_dd: jax.Array) -> jax.Array:
+    """The ColRel collapse ``(1/n) tau_up @ (A * tau_dd^T)`` as an (n,)
+    f32 row — the carried accumulator of the segment-streaming path,
+    identical expression (and accumulation) to the ``fused_aggregate``
+    interpret path."""
+    n = tau_up.shape[0]
+    return (tau_up.astype(jnp.float32) @ mixing_mask(A, tau_dd)) / n
+
+
+def block_collapsed_weight_row(Ab: jax.Array, tau_up: jax.Array,
+                               tau_b: jax.Array) -> jax.Array:
+    """Per-cluster collapse ``w_c = (1/n) tau_c @ (A_c * tau_c^T)`` as a
+    (C, m) f32 tensor — identical einsum to the ``block_fused_aggregate``
+    interpret path."""
+    C, m, _ = Ab.shape
+    n = C * m
+    return jnp.einsum(
+        "ci,cij->cj",
+        tau_up.astype(jnp.float32).reshape(C, m),
+        Ab.astype(jnp.float32) * jnp.swapaxes(tau_b, 1, 2).astype(jnp.float32),
+    ) / n
+
+
+def row_stream(w: jax.Array, segment: jax.Array, *,
+               block_d: int = 2048) -> jax.Array:
+    """One segment's PS-delta columns ``w @ segment`` ((n,) x (n, d_i) ->
+    (d_i,) f32); consumes f32/bf16/int8 segments directly."""
+    if _interpret():
+        # Same contraction as the fused_aggregate interpret path restricted
+        # to this segment's columns — bitwise-equal to the monolithic pass.
+        return w @ segment.astype(jnp.float32)
+    return row_stream_pallas(w, segment, block_d=block_d)
+
+
+def block_row_stream(w: jax.Array, segment: jax.Array, *,
+                     block_d: int = 2048) -> jax.Array:
+    """One segment's blocked PS-delta columns
+    ``sum_c w_c @ segment_c`` ((C, m) x (n, d_i) -> (d_i,) f32)."""
+    if _interpret():
+        # Identical einsum form to the block_fused_aggregate interpret path
+        # so per-segment outputs match the monolithic pass bitwise.
+        C, m = w.shape
+        return jnp.einsum("cj,cjk->k", w,
+                          segment.astype(jnp.float32).reshape(C, m, -1))
+    return block_row_stream_pallas(w, segment, block_d=block_d)
+
+
+def memory_stream(mix: jax.Array, tau_up: jax.Array, segment: jax.Array,
+                  buf_seg: jax.Array, *, block_d: int = 2048):
+    """One segment of the memory-strategy recursion against the
+    caller-computed realized mask: returns ``(delta_seg (d_i,),
+    contrib_seg (n, d_i))`` — the columns ``fused_memory_update`` would
+    produce, without the monolithic stack."""
+    if _interpret():
+        # Same math and accumulation order as the fused_memory_update
+        # interpret path (and hence MemoryStrategy.aggregate, the oracle),
+        # restricted to this segment's columns.
+        n = segment.shape[0]
+        tilde = mix @ segment.astype(jnp.float32)
+        t = tau_up.astype(jnp.float32)[:, None]
+        contrib = t * tilde + (1.0 - t) * buf_seg
+        delta = jnp.ones((n,), jnp.float32) @ contrib / n
+        return delta, contrib
+    return memory_stream_pallas(mix, tau_up, segment, buf_seg,
+                                block_d=block_d)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,

@@ -148,3 +148,54 @@ def block_fused_aggregate_pallas(
         interpret=interpret,
     )(a, tbt, tu, updates)
     return out.reshape(d)
+
+
+def _block_row_stream_kernel(w_ref, x_ref, o_ref):
+    c = pl.program_id(1)  # cluster axis is innermost
+    partial = jax.lax.dot(
+        w_ref[0], x_ref[...].astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(c > 0)
+    def _accum():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def block_row_stream_pallas(
+    w: jax.Array,        # (C, m) f32 collapsed cluster weight rows
+    segment: jax.Array,  # (n, d_i) = (C*m, d_i) one leaf's update segment
+    *,
+    block_d: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """Segment-streaming blocked delta (DESIGN.md §14): the per-cluster
+    collapsed rows arrive precomputed (carried across segments) and each
+    cluster's slab of this segment accumulates into the shared output
+    tile — the columns ``block_fused_aggregate_pallas`` would produce
+    for the same leaf, without the monolithic stack."""
+    C, m = w.shape
+    n, d = segment.shape
+    if n != C * m:
+        raise ValueError(f"segment rows {n} != C*m = {C * m}")
+    wr = w.astype(jnp.float32).reshape(C, 1, m)
+    bd = min(block_d, d)
+
+    out = pl.pallas_call(
+        _block_row_stream_kernel,
+        grid=(pl.cdiv(d, bd), C),
+        in_specs=[
+            pl.BlockSpec((1, 1, m), lambda i, c: (c, 0, 0)),  # cluster row
+            pl.BlockSpec((m, bd), lambda i, c: (c, i)),       # cluster slab
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, c: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(wr, segment)
+    return out.reshape(d)

@@ -268,6 +268,11 @@ def build_step(
             in_sh = (*in_sh, streak_sh)
             out_sh = (psh, ssh, st_sh, streak_sh, metrics_sh)
             lower_args = (*lower_args, specs["streak"])
+        # the round's carry slots (params / server_state / agg_state, plus
+        # the telemetry streak) alias their outputs 1:1 — consumers jit with
+        # these to keep one live (n, d) generation instead of two
+        # (DESIGN.md §14).  Taus, batches and A are never donated.
+        round_fn.donate_argnums = (0, 1, 2) + ((7,) if telemetry else ())
         return round_fn, lower_args, in_sh, out_sh
 
     if specs["kind"] == "prefill":

@@ -130,6 +130,12 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest committed checkpoint in "
                          "--ckpt-dir and continue to --rounds")
+    ap.add_argument("--segment-d", type=int, default=0,
+                    help="d threshold for segment-streaming aggregation "
+                         "(0 = monolithic stack; DESIGN.md §14)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable carry-buffer donation (keeps two live "
+                         "(n, d) generations; for A/B memory measurement)")
     args = ap.parse_args()
 
     # the fused kernel only exists on the colrel path; refuse the
@@ -182,7 +188,12 @@ def main():
     A = jnp.asarray(res.A, jnp.float32)
 
     rc = RoundConfig(n_clients=n, local_steps=args.local_steps,
-                     mode="per_client", aggregation=strategy)
+                     mode="per_client", aggregation=strategy,
+                     segment_d=args.segment_d)
+    # carry-slot donation (DESIGN.md §14): params / server_state /
+    # agg_state (and the telemetry streak / no-trace channel carry) alias
+    # their outputs, so one (n, d) generation stays live instead of two.
+    donate = not args.no_donate
     server_opt = sgd_momentum(1.0, beta=0.9)
     sstate = server_opt.init(params)
     agg_state = strategy.init_state(n, flat_spec(params).d)
@@ -295,7 +306,8 @@ def main():
     # overlapped with the next block's device compute; SIGTERM/SIGINT
     # latches and the loop drains + commits a final checkpoint at the
     # next boundary instead of dying mid-write.
-    ckpt = (AsyncCheckpointer(args.ckpt_dir, keep=args.ckpt_keep)
+    ckpt = (AsyncCheckpointer(args.ckpt_dir, keep=args.ckpt_keep,
+                              copy_arrays=donate)
             if args.ckpt_dir else None)
     ckpt_last = -1
     _stack = contextlib.ExitStack()
@@ -353,9 +365,13 @@ def main():
                 cfg.jdtype)
         return batches
 
+    don_traced = ((0, 1, 2) + ((7,) if telemetry else ())) if donate else ()
+    don_sampled = ((0, 1, 2, 4, 5) + ((7,) if telemetry else ())) if donate else ()
+
     if args.chunk == 1:
         round_fn = jax.jit(mk_round(bundle.loss_fn, sgd(0.25), server_opt,
-                                    rc, telemetry=telemetry))
+                                    rc, telemetry=telemetry),
+                           donate_argnums=don_traced)
         done = r_start
         for r in range(r_start, args.rounds):
             if profile is not None:
@@ -399,7 +415,8 @@ def main():
         init_fn, sample_fn = channel.scan_sampler()
         scan_fn = jax.jit(mk_scan(
             bundle.loss_fn, sgd(0.25), server_opt, rc,
-            channel_sampler=sample_fn, telemetry=telemetry))
+            channel_sampler=sample_fn, telemetry=telemetry),
+            donate_argnums=don_sampled)
         ch_rng, sub = jax.random.split(jax.random.PRNGKey(args.seed))
         ch_state = init_fn(sub)
         if resume_state is not None:
@@ -409,7 +426,8 @@ def main():
     else:
         scan_fn = jax.jit(mk_scan(bundle.loss_fn, sgd(0.25),
                                   server_opt, rc,
-                                  telemetry=telemetry))
+                                  telemetry=telemetry),
+                          donate_argnums=don_traced)
     done = r_start
     for c in range(r_start // K, args.rounds // K):
         r0 = c * K

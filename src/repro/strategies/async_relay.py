@@ -139,6 +139,16 @@ class AsyncRelayStrategy(AggregationStrategy):
         }
 
     # -- the async carry --------------------------------------------------
+    @staticmethod
+    def _advance_age(age, deliv):
+        """Where-free age recurrence: ``deliv`` is an exact {0., 1.}
+        indicator, so ``(age + 1) * (1 - deliv)`` in int32 is bitwise the
+        select form — a single fused multiply on the (n,) vector instead
+        of a predicated copy.  (The staging refresh below keeps ``where``:
+        arithmetic masking of fp payloads would perturb bitwise replay.)
+        """
+        return ((age + 1) * (1 - deliv.astype(jnp.int32))).astype(jnp.int32)
+
     def advance(self, age, staging, stack, tau_up, tau_dd):
         """One step of the carry recurrence: ``(delivered, age', staging')``.
 
@@ -146,7 +156,7 @@ class AsyncRelayStrategy(AggregationStrategy):
         blocked clients keep aging in place.
         """
         deliv = delivered_mask(tau_up, tau_dd, opportunistic=self.opportunistic)
-        age = jnp.where(deliv > 0, 0, age + 1).astype(jnp.int32)
+        age = self._advance_age(age, deliv)
         staging = jnp.where(deliv[:, None] > 0, stack.astype(staging.dtype),
                             staging)
         return deliv, age, staging
@@ -176,10 +186,14 @@ class AsyncRelayStrategy(AggregationStrategy):
 
     def aggregate_tree(self, deltas, tau_up, tau_dd, A, state,
                        ctx: ExecutionContext):
+        spec = flatten.flat_spec(deltas, stacked=True)
+        if (ctx.use_segments(spec.d) and not self.inner.stateful
+                and self.inner.scalar_collapsible):
+            return self._aggregate_segments(deltas, spec, tau_up, tau_dd, A,
+                                            state, ctx)
         # flatten once into the staging layout, advance the carry, then
         # hand the re-stacked effective tree to the inner scheme so its
         # own execution path (faithful / fused / blocked) still applies.
-        spec = flatten.flat_spec(deltas, stacked=True)
         stack = flatten.ravel_stacked(deltas, dtype=ctx.flat_dtype)
         deliv, age, staging = self.advance(
             state["age"], state["staging"], stack, tau_up, tau_dd)
@@ -189,6 +203,50 @@ class AsyncRelayStrategy(AggregationStrategy):
         gdelta, inner_state = self.inner.aggregate_tree(
             eff_tree, jnp.ones_like(tau_up), tau_dd, A, state["inner"], ctx)
         return gdelta, {"age": age, "staging": staging, "inner": inner_state}
+
+    def _aggregate_segments(self, deltas, spec, tau_up, tau_dd, A, state, ctx):
+        """Segment-streaming async round (DESIGN.md §14).
+
+        The monolithic path materializes ~5 full-size (n, d) buffers
+        (ravel, staging select, effective scaling, the re-stacked tree,
+        the inner's re-ravel).  Here the staging buffer is the *only*
+        (n, d) array: each leaf's segment is selected into the matching
+        staging columns with ``where`` + ``dynamic_update_slice`` (a
+        sequential read-modify-write on one buffer — donation-aliasable),
+        and the staleness multipliers fold into the inner scheme's
+        collapsed weight row (inner sees full participation), so the
+        delta streams straight off the staging columns.  The fold changes
+        the fp association (``(w·m) @ s`` vs ``w @ (m·s)``): deltas agree
+        with the monolithic path to fp32 contraction tolerance, while
+        ``age``/``staging`` — and hence the staleness metrics — stay
+        bitwise (pinned in ``tests/test_larged.py``).
+        """
+        from repro.kernels import ops as kernel_ops
+
+        deliv = delivered_mask(tau_up, tau_dd,
+                               opportunistic=self.opportunistic)
+        age = self._advance_age(state["age"], deliv)
+        staging = state["staging"]
+        n = staging.shape[0]
+        segments = flatten.ravel_stacked_segments(deltas, dtype=ctx.flat_dtype)
+        refresh = deliv[:, None] > 0
+        for seg, off, sz in zip(segments, spec.offsets, spec.sizes):
+            cur = jax.lax.slice(staging, (0, off), (n, off + sz))
+            staging = jax.lax.dynamic_update_slice(
+                staging, jnp.where(refresh, seg.astype(staging.dtype), cur),
+                (0, off))
+        s = jnp.power(jnp.float32(self.gamma), age.astype(jnp.float32))
+        mult = s * (jnp.float32(n) / jnp.sum(s))
+        w_eff = self.inner.weights(jnp.ones_like(tau_up), tau_dd, A) * mult
+        leaves = [
+            kernel_ops.row_stream(
+                w_eff, jax.lax.slice(staging, (0, off), (n, off + sz)),
+                block_d=ctx.fused_block_d).reshape(shape)
+            for off, sz, shape in zip(spec.offsets, spec.sizes, spec.shapes)
+        ]
+        gdelta = jax.tree.unflatten(spec.treedef, leaves)
+        return gdelta, {"age": age, "staging": staging,
+                        "inner": state["inner"]}
 
     def __repr__(self) -> str:
         return (f"AsyncRelayStrategy(inner={self.inner.name!r}, "

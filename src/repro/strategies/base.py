@@ -62,6 +62,17 @@ class ExecutionContext:
     flat_dtype: Any = jnp.float32  # dtype of the raveled (n, d) stack
     fused_block_d: int = 2048      # d-axis tile for Pallas kernels
     spmd_axes: Optional[tuple] = None  # set when running under pjit
+    #: flat-dim threshold for segment streaming (DESIGN.md §14): at
+    #: ``d >= segment_d`` the kernel-fused strategies consume per-leaf
+    #: (n, d_i) segments instead of materializing the monolithic (n, d)
+    #: stack.  0 (default) disables segmenting — the monolithic path is
+    #: the oracle and stays the golden-pinned default.
+    segment_d: int = 0
+
+    def use_segments(self, d: int) -> bool:
+        """Whether the segment-streaming path engages for flat dim ``d``
+        (never under pjit: GSPMD partitions the monolithic contraction)."""
+        return 0 < self.segment_d <= d and not self.spmd_axes
 
 
 class AggregationStrategy:

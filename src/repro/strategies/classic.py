@@ -73,11 +73,28 @@ class ColRelStrategy(AggregationStrategy):
 
     def aggregate_tree(self, deltas, tau_up, tau_dd, A, state, ctx: ExecutionContext):
         if self.fused == "kernel":
+            spec = flatten.flat_spec(deltas, stacked=True)
+            if ctx.use_segments(spec.d):
+                # segment streaming (DESIGN.md §14): collapse the weight
+                # row once, stream each per-leaf (n, d_i) segment through
+                # its own kernel pass, and reshape each partial delta
+                # straight to its leaf — neither the (n, d) stack nor the
+                # (d,) flat delta ever materializes.
+                from repro.kernels import ops as kernel_ops
+
+                w = kernel_ops.collapsed_weight_row(A, tau_up, tau_dd)
+                segments = flatten.ravel_stacked_segments(
+                    deltas, dtype=ctx.flat_dtype)
+                leaves = [
+                    kernel_ops.row_stream(
+                        w, seg, block_d=ctx.fused_block_d).reshape(shape)
+                    for seg, shape in zip(segments, spec.shapes)
+                ]
+                return jax.tree.unflatten(spec.treedef, leaves), state
             # flatten-once fused path: ravel the update pytree into a
             # single contiguous (n, d) stack, stream it through the fused
             # aggregation exactly once (mask + relay mix + blind PS sum,
             # fp32 accumulation), unravel the (d,) delta.
-            spec = flatten.flat_spec(deltas, stacked=True)
             stack = flatten.ravel_stacked(deltas, dtype=ctx.flat_dtype)
             if ctx.spmd_axes:
                 # Sharded execution: express the pass as a plain

@@ -72,11 +72,27 @@ class ClusteredColRelStrategy(AggregationStrategy):
     def aggregate_tree(self, deltas, tau_up, tau_dd, A, state, ctx: ExecutionContext):
         C, m, _ = A.shape
         if self.fused == "kernel":
+            spec = flatten.flat_spec(deltas, stacked=True)
+            if ctx.use_segments(spec.d):
+                # segment streaming (DESIGN.md §14): collapse the per-
+                # cluster weight rows once, stream each per-leaf segment
+                # through its own blocked pass, reshape straight to the
+                # leaf — the monolithic (n, d) stack never materializes.
+                from repro.kernels import ops as kernel_ops
+
+                w = kernel_ops.block_collapsed_weight_row(A, tau_up, tau_dd)
+                segments = flatten.ravel_stacked_segments(
+                    deltas, dtype=ctx.flat_dtype)
+                leaves = [
+                    kernel_ops.block_row_stream(
+                        w, seg, block_d=ctx.fused_block_d).reshape(shape)
+                    for seg, shape in zip(segments, spec.shapes)
+                ]
+                return jax.tree.unflatten(spec.treedef, leaves), state
             # flatten-once blocked path: ravel the update pytree into one
             # (n, d) stack, stream it through the blocked aggregation
             # exactly once (per-cluster mask + mix + blind sum, fp32
             # accumulation), unravel the (d,) delta.
-            spec = flatten.flat_spec(deltas, stacked=True)
             stack = flatten.ravel_stacked(deltas, dtype=ctx.flat_dtype)
             if ctx.spmd_axes:
                 # Sharded execution: plain contraction so GSPMD partitions

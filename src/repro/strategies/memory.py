@@ -81,13 +81,36 @@ class MemoryStrategy(AggregationStrategy):
     def aggregate_tree(self, deltas, tau_up, tau_dd, A, state,
                        ctx: ExecutionContext):
         if self.fused == "kernel" and not ctx.spmd_axes:
+            spec = flatten.flat_spec(deltas, stacked=True)
+            from repro.kernels import ops as kernel_ops
+
+            if ctx.use_segments(spec.d):
+                # segment streaming (DESIGN.md §14): realized mask once,
+                # then per-leaf passes that read the matching replay-
+                # buffer columns and write each contrib segment back with
+                # dynamic_update_slice — a sequential read-modify-write
+                # on one buffer (segments are disjoint, each read precedes
+                # its own write), so XLA updates the donated buffer in
+                # place and the update stack never materializes.
+                mix = kernel_ops.mixing_mask(A, tau_dd)
+                segments = flatten.ravel_stacked_segments(
+                    deltas, dtype=jnp.float32)
+                n = state.shape[0]
+                buf = state
+                leaves = []
+                for seg, off, sz, shape in zip(segments, spec.offsets,
+                                               spec.sizes, spec.shapes):
+                    buf_seg = jax.lax.slice(buf, (0, off), (n, off + sz))
+                    dseg, contrib = kernel_ops.memory_stream(
+                        mix, tau_up, seg, buf_seg,
+                        block_d=ctx.fused_block_d)
+                    buf = jax.lax.dynamic_update_slice(buf, contrib, (0, off))
+                    leaves.append(dseg.reshape(shape))
+                return jax.tree.unflatten(spec.treedef, leaves), buf
             # flatten-once + fused select-accumulate-update: the tilde
             # consensus intermediate lives in VMEM only; the kernel
             # writes exactly the (d,) delta and the new (n, d) buffer.
-            spec = flatten.flat_spec(deltas, stacked=True)
             stack = flatten.ravel_stacked(deltas, dtype=jnp.float32)
-            from repro.kernels import ops as kernel_ops
-
             gflat, contrib = kernel_ops.fused_memory_update(
                 A, tau_up, tau_dd, stack, state, block_d=ctx.fused_block_d
             )

@@ -39,6 +39,7 @@ dense path so GSPMD can partition the contraction (DESIGN.md §2/§8).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro import wire
@@ -124,17 +125,37 @@ class QuantizedStrategy(AggregationStrategy):
     def aggregate_tree(self, deltas, tau_up, tau_dd, A, state,
                        ctx: ExecutionContext):
         if self.fused == "kernel" and not ctx.spmd_axes:
+            spec = flatten.flat_spec(deltas, stacked=True)
+            from repro.kernels import ops as kernel_ops
+
+            if ctx.use_segments(spec.d) and self.codec.supports_segmented:
+                # segment streaming (DESIGN.md §14): quantize per-leaf
+                # segments against one row-global scale, fold the scales
+                # (and bias correction) into the collapsed weight row
+                # once, stream each int8 segment through its own pass —
+                # neither the f32 nor the int8 monolithic stack exists.
+                codec_state, inner_state = state
+                (qs, scale), codec_state = self.codec.encode_segments(
+                    flatten.ravel_stacked_segments(deltas, dtype=jnp.float32),
+                    codec_state)
+                gain = self.codec.descriptor(spec.d).gain
+                w = kernel_ops.collapsed_weight_row(A, tau_up, tau_dd)
+                ws = w * (scale / jnp.float32(gain)).reshape(-1)
+                leaves = [
+                    kernel_ops.row_stream(
+                        ws, q, block_d=ctx.fused_block_d).reshape(shape)
+                    for q, shape in zip(qs, spec.shapes)
+                ]
+                return (jax.tree.unflatten(spec.treedef, leaves),
+                        (codec_state, inner_state))
             # flatten-once + fused dequant: encode the raveled stack,
             # then stream the int8 payload through one Pallas pass with
             # the dequant scales (and the bias correction) folded into
             # the collapsed colrel weight row.
-            spec = flatten.flat_spec(deltas, stacked=True)
             stack = flatten.ravel_stacked(deltas, dtype=jnp.float32)
             codec_state, inner_state = state
             (q, scale), codec_state = self.codec.encode(stack, codec_state)
             gain = self.codec.descriptor(spec.d).gain
-            from repro.kernels import ops as kernel_ops
-
             gflat = kernel_ops.fused_dequant_aggregate(
                 A, tau_up, tau_dd, q, scale / jnp.float32(gain),
                 block_d=ctx.fused_block_d,

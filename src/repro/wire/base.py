@@ -91,6 +91,11 @@ class WireCodec:
     #: (``kernels/fused_dequant.py``) consumes without ever
     #: materializing the dequantized f32 stack.
     supports_fused_dequant: bool = False
+    #: True when :meth:`encode_segments` is implemented — the codec can
+    #: quantize a list of per-leaf ``(n, d_i)`` column segments against
+    #: one row-global scale, so the segment-streaming aggregation path
+    #: (DESIGN.md §14) never assembles the monolithic ``(n, d)`` stack.
+    supports_segmented: bool = False
 
     def descriptor(self, d: int) -> CodecDescriptor:
         """The bias/variance contract for flat dimension ``d``."""
@@ -105,6 +110,16 @@ class WireCodec:
     def encode(self, x: jax.Array, state: State) -> Tuple[Encoded, State]:
         """Dense ``(n, d)`` f32 stack -> (encoded, next state)."""
         raise NotImplementedError
+
+    def encode_segments(self, segments, state: State) -> Tuple[Encoded, State]:
+        """Per-leaf ``[(n, d_i), ...]`` column segments -> ((encoded
+        segment list, row scale), next state) without assembling the
+        monolithic stack.  Only codecs declaring ``supports_segmented``
+        implement this; the row scale must be *global* across segments
+        (the same affine contract as :meth:`encode`)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support segmented encode"
+        )
 
     def decode(self, encoded: Encoded) -> jax.Array:
         """Encoded form -> reconstructed ``(n, d)`` f32 stack (raw — the

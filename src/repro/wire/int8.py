@@ -71,6 +71,7 @@ class Int8StochasticCodec(WireCodec):
     name = "int8"
     stateful = True
     supports_fused_dequant = True
+    supports_segmented = True
 
     def __init__(self, bits: int = 8, seed: int = 0):
         if not 2 <= int(bits) <= 8:
@@ -107,6 +108,35 @@ class Int8StochasticCodec(WireCodec):
         q = jnp.floor(xf / scale + u)
         q = jnp.clip(q, -self.levels, self.levels).astype(jnp.int8)
         return (q, scale), key
+
+    def encode_segments(self, segments, state: State) -> Tuple[tuple, State]:
+        """Quantize per-leaf ``(n, d_i)`` segments against one row-global
+        scale without assembling the stack (DESIGN.md §14).
+
+        The row scale is the max over per-segment row maxima — max is
+        exactly associative, so the scale is **bitwise** the monolithic
+        ``encode`` scale.  The rounding noise draws come from per-segment
+        ``fold_in`` subkeys instead of one monolithic ``uniform``; the
+        draws are therefore distributionally identical but not the same
+        realization as ``encode`` (same contract as the no-trace channel
+        sampler), and the state advances by the same single ``split``.
+        """
+        key, sub = jax.random.split(state)
+        maxima = [jnp.max(jnp.abs(s.astype(jnp.float32)), axis=1,
+                          keepdims=True) for s in segments]
+        rowmax = maxima[0]
+        for m in maxima[1:]:
+            rowmax = jnp.maximum(rowmax, m)
+        scale = jnp.maximum(rowmax / self.levels, jnp.float32(1e-12))
+        qs = []
+        for i, s in enumerate(segments):
+            xf = s.astype(jnp.float32)
+            u = jax.random.uniform(jax.random.fold_in(sub, i), xf.shape,
+                                   jnp.float32)
+            q = jnp.clip(jnp.floor(xf / scale + u),
+                         -self.levels, self.levels).astype(jnp.int8)
+            qs.append(q)
+        return (qs, scale), key
 
     def decode(self, encoded: tuple) -> jax.Array:
         q, scale = encoded

@@ -92,9 +92,10 @@ def _channel(strategy: str, model, *, seed=5, block=4):
 
 
 def make_trainer(strategy: str, mode: str = "per_round", *, telemetry=False,
-                 seed=3) -> FLTrainer:
+                 seed=3, **trainer_kw) -> FLTrainer:
     """The tiny least-squares fixture from the resume golden tests,
-    generalized over the execution-mode axis."""
+    generalized over the execution-mode axis.  Extra keywords pass
+    through to :class:`FLTrainer` (``donate``, ``segment_d``, ...)."""
     rng = np.random.default_rng(0)
     targets = rng.normal(size=(N, D)).astype(np.float32)
     clients = [ClientDataset({"t": np.repeat(targets[i][None], 64, 0)},
@@ -110,7 +111,7 @@ def make_trainer(strategy: str, mode: str = "per_round", *, telemetry=False,
                      clients, sgd(0.3), sgd_momentum(1.0, beta=0.9),
                      local_steps=2, strategy=strategy, seed=seed,
                      channel=_channel(strategy, model), mode=fl_mode,
-                     telemetry=telemetry)
+                     telemetry=telemetry, **trainer_kw)
 
 
 def run_kwargs(mode: str) -> dict:

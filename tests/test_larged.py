@@ -1,0 +1,239 @@
+"""Large-d engine tests (DESIGN.md §14): segmented flatten vs the
+concat oracle, unaligned-d segment streaming, carry donation, and the
+donation-vs-async-checkpoint race.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import conformance
+from repro import strategies
+from repro.ckpt import writer
+from repro.core import flatten
+from repro.kernels import ops as kernel_ops
+from repro.strategies.async_relay import AsyncRelayStrategy, delivered_mask
+from repro.strategies.base import ExecutionContext
+
+N = 5
+
+
+def _tree(shapes, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}": jnp.asarray(rng.normal(size=(N, *s)).astype(dtype))
+            for i, s in enumerate(shapes)}
+
+
+# awkward layouts: prime sizes, 1-element leaves, a single-leaf tree
+AWKWARD = [
+    [(7, 3), (1,), (13,), (2, 5, 3)],
+    [(1,), (1,), (1,)],
+    [(37,)],
+]
+
+
+@pytest.mark.parametrize("shapes", AWKWARD)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ravel_stacked_dus_bitwise_matches_concat(shapes, dtype):
+    """The segmented DUS-fill flatten is bitwise the concatenate oracle,
+    including the per-leaf cast (no full-size third copy)."""
+    tree = _tree(shapes)
+    a = flatten.ravel_stacked(tree, dtype=dtype)
+    b = flatten.ravel_stacked_concat(tree, dtype=dtype)
+    assert a.dtype == b.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("shapes", AWKWARD)
+def test_segments_concat_is_the_stack(shapes):
+    tree = _tree(shapes)
+    segs = flatten.ravel_stacked_segments(tree, dtype=jnp.float32)
+    spec = flatten.flat_spec(tree, stacked=True)
+    assert [s.shape for s in segs] == [(N, sz) for sz in spec.sizes]
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate(segs, axis=1)),
+        np.asarray(flatten.ravel_stacked(tree, dtype=jnp.float32)))
+
+
+def _ctx(segment_d=0):
+    return ExecutionContext(n_clients=N, segment_d=segment_d)
+
+
+def _channel(seed=1):
+    rng = np.random.default_rng(seed)
+    tau_up = jnp.asarray((rng.random(N) < 0.6).astype(np.float32))
+    tau_dd = jnp.asarray((rng.random((N, N)) < 0.7).astype(np.float32))
+    A = jnp.asarray(rng.dirichlet(np.ones(N), size=N).T.astype(np.float32))
+    return tau_up, tau_dd, A
+
+
+@pytest.mark.parametrize("shapes", AWKWARD)
+def test_colrel_segment_stream_unaligned_d(shapes):
+    """Segmented colrel == monolithic kernel path at prime/unaligned d.
+    The reduction is over n per column, so nothing reassociates — but
+    op-by-op (unjitted) the two matmul shapes may vectorize the 5-term
+    dot differently, so the eager contract is 1-ulp, not bitwise (the
+    jitted trainer-level comparison below is the bitwise pin)."""
+    s = strategies.get("colrel", fused="kernel")
+    tree = _tree(shapes)
+    tau_up, tau_dd, A = _channel()
+    d_mono, st_mono = s.aggregate_tree(tree, tau_up, tau_dd, A,
+                                       s.init_state(N, 1), _ctx(0))
+    d_seg, st_seg = s.aggregate_tree(tree, tau_up, tau_dd, A,
+                                     s.init_state(N, 1), _ctx(1))
+    for a, b in zip(jax.tree.leaves(d_mono), jax.tree.leaves(d_seg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-8, rtol=1e-6)
+
+
+def test_use_segments_gate():
+    """segment_d is opt-in (0 = off), engages at d >= segment_d, and
+    never under pjit axes (GSPMD owns the partitioning there)."""
+    assert not ExecutionContext(n_clients=N, segment_d=0).use_segments(10)
+    assert ExecutionContext(n_clients=N, segment_d=10).use_segments(10)
+    assert not ExecutionContext(n_clients=N, segment_d=11).use_segments(10)
+    assert not ExecutionContext(n_clients=N, segment_d=1,
+                                spmd_axes=("c",)).use_segments(10)
+
+
+def test_async_age_where_free_bitwise():
+    """The where-free age recurrence is bitwise the select form for the
+    exact {0., 1.} delivery indicator."""
+    rng = np.random.default_rng(3)
+    age = jnp.asarray(rng.integers(0, 9, size=64), jnp.int32)
+    deliv = jnp.asarray((rng.random(64) < 0.5).astype(np.float32))
+    got = AsyncRelayStrategy._advance_age(age, deliv)
+    want = jnp.where(deliv > 0, 0, age + 1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_async_segmented_age_staging_and_metrics_bitwise():
+    """Segmented async round: age / staging (hence mean_age / max_age /
+    stale_frac, which are pure functions of age) stay bitwise the
+    monolithic path; the delta agrees to fp32 contraction tolerance
+    (the staleness fold reassociates one multiply)."""
+    shapes = AWKWARD[0]
+    s = strategies.AsyncRelayStrategy(
+        inner=strategies.get("colrel", fused="kernel"), gamma=0.8)
+    tree = _tree(shapes)
+    d = flatten.flat_spec(tree, stacked=True).d
+    tau_up, tau_dd, A = _channel()
+    st0 = s.init_state(N, d)
+    # pre-age the carry so the staleness weights are non-trivial
+    st0["age"] = jnp.asarray([0, 2, 1, 0, 3], jnp.int32)
+    st0["staging"] = flatten.ravel_stacked(_tree(shapes, seed=9))
+    d_mono, st_mono = s.aggregate_tree(tree, tau_up, tau_dd, A,
+                                       dict(st0), _ctx(0))
+    d_seg, st_seg = s.aggregate_tree(tree, tau_up, tau_dd, A,
+                                     dict(st0), _ctx(1))
+    np.testing.assert_array_equal(np.asarray(st_mono["age"]),
+                                  np.asarray(st_seg["age"]))
+    np.testing.assert_array_equal(np.asarray(st_mono["staging"]),
+                                  np.asarray(st_seg["staging"]))
+    for a, b in zip(jax.tree.leaves(d_mono), jax.tree.leaves(d_seg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-6, rtol=2e-6)
+    # the staleness metrics the async round emits are functions of age
+    for f in (lambda a: jnp.mean(a.astype(jnp.float32)), jnp.max,
+              lambda a: jnp.mean((a > 0).astype(jnp.float32))):
+        assert float(f(st_mono["age"])) == float(f(st_seg["age"]))
+
+
+def test_delivered_mask_matches_oracle():
+    tau_up, tau_dd, _ = _channel(4)
+    got = delivered_mask(tau_up, tau_dd)
+    tu, td = np.asarray(tau_up), np.asarray(tau_dd)
+    want = np.maximum(tu, (td * tu[None, :]).max(axis=1))
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.float32))
+
+
+# -- donation ----------------------------------------------------------
+
+
+def test_round_donation_aliases_carry_buffers():
+    """donate_argnums on the compiled round aliases the carry into the
+    outputs: XLA reports reclaimed bytes and the peak drops."""
+    from repro.fl.round import RoundConfig, make_round_fn
+    from repro.optim import sgd, sgd_momentum
+
+    D = 4096
+    params = {"x": jnp.zeros((D,), jnp.float32)}
+    batches = {"t": jnp.zeros((N, 1, 2, D), jnp.float32)}
+
+    def loss_fn(p, batch):
+        r = p["x"] - batch["t"]
+        return jnp.mean(r * r), None
+
+    rc = RoundConfig(n_clients=N, local_steps=1, mode="per_client",
+                     aggregation=strategies.get("colrel", fused="kernel"),
+                     segment_d=1)
+    fn = make_round_fn(loss_fn, sgd(0.3), sgd_momentum(1.0, beta=0.9), rc)
+    sstate = sgd_momentum(1.0, beta=0.9).init(params)
+    agg = rc.aggregation.init_state(N, D)
+    tau_up, tau_dd, A = _channel()
+    args = (params, sstate, agg, batches, tau_up, tau_dd, A)
+
+    def peak(c):
+        m = c.memory_analysis()
+        return (m.argument_size_in_bytes + m.output_size_in_bytes
+                + m.temp_size_in_bytes - m.alias_size_in_bytes)
+
+    plain = jax.jit(fn).lower(*args).compile()
+    donated = jax.jit(fn, donate_argnums=(0, 1, 2)).lower(*args).compile()
+    assert donated.memory_analysis().alias_size_in_bytes > 0
+    assert peak(donated) < peak(plain)
+
+
+@pytest.mark.parametrize("mode", ["per_round", "chunked", "no_trace",
+                                  "async"])
+def test_donated_run_bitwise_matches_undonated(mode):
+    """Donation is a memory optimization, not a numeric one: every
+    engine produces bitwise-identical trajectories and final state with
+    and without it."""
+    kw = conformance.run_kwargs(mode)
+    a = conformance.make_trainer("colrel", mode, donate=True)
+    a.run(6, **kw)
+    b = conformance.make_trainer("colrel", mode, donate=False)
+    b.run(6, **kw)
+    conformance.assert_same_run(a, b)
+
+
+def test_segmented_trainer_bitwise_matches_monolithic():
+    """The conformance fixture through the chunked engine with segment
+    streaming engaged == the monolithic kernel path, bitwise."""
+    s = strategies.get("colrel", fused="kernel")
+    a = conformance.make_trainer(s, "chunked", segment_d=1)
+    a.run(6, chunk=3)
+    b = conformance.make_trainer(s, "chunked", segment_d=0)
+    b.run(6, chunk=3)
+    conformance.assert_same_run(a, b)
+
+
+def test_snapshot_copy_arrays_survives_donation(tmp_path):
+    """The async-checkpoint / donation race: a copy_arrays snapshot owns
+    its storage, so the writer thread survives the caller donating (and
+    XLA deleting) the original carry buffers before serialization."""
+    tree = {"x": jnp.arange(8, dtype=jnp.float32),
+            "y": {"z": jnp.ones((3, 4), jnp.float32)}}
+    snap = writer.snapshot(tree, copy_arrays=True)
+    for leaf in jax.tree.leaves(tree):
+        leaf.delete()  # what donating into the next step does
+    path = writer.write_state(tmp_path / "c.msgpack", snap, snapshotted=True)
+    out = writer.read_state(path)
+    np.testing.assert_array_equal(out["x"], np.arange(8, dtype=np.float32))
+    np.testing.assert_array_equal(out["y"]["z"], np.ones((3, 4), np.float32))
+
+
+def test_ckpt_resume_with_donation_enabled(tmp_path):
+    """Periodic async checkpoints under the donating trainer: the
+    committed snapshot restores bitwise (the copy was taken before the
+    buffers were donated away)."""
+    ref = conformance.make_trainer("colrel", "chunked")
+    ref.run(6, chunk=3)
+
+    t1 = conformance.make_trainer("colrel", "chunked")
+    t1.run(3, chunk=3, ckpt_dir=tmp_path, ckpt_every=3)
+    t2 = conformance.make_trainer("colrel", "chunked")
+    t2.run(6, chunk=3, resume_from=tmp_path)
+    conformance.assert_same_run(ref, t2)
